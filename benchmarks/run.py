@@ -1,0 +1,60 @@
+"""Benchmark entry point: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+
+Writes JSON to results/bench/ and prints each table as markdown.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+from benchmarks import (appendix_b_masks, bits_accounting, fig5_preprocess,
+                        fig6_ratio_sweep, kernel_bench, roofline,
+                        table1_ppl, table2_tasks, table3_ablation,
+                        table8_resources, table12_memory)
+
+SUITES = [
+    ("bits_accounting", bits_accounting.run),
+    ("kernel_bench", kernel_bench.run),
+    ("table12_memory", table12_memory.run),
+    ("roofline", roofline.run),
+    ("table1_ppl", table1_ppl.run),
+    ("table3_ablation", table3_ablation.run),
+    ("table2_tasks", table2_tasks.run),
+    ("fig6_ratio_sweep", fig6_ratio_sweep.run),
+    ("fig5_preprocess", fig5_preprocess.run),
+    ("appendix_b_masks", appendix_b_masks.run),
+    ("table8_resources", table8_resources.run),
+]
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--quick", action="store_true",
+                   help="reduced method/shape sets (CI budget)")
+    p.add_argument("--only", default=None)
+    args = p.parse_args(argv)
+
+    failures = []
+    for name, fn in SUITES:
+        if args.only and args.only != name:
+            continue
+        print(f"\n{'='*70}\n== {name}\n{'='*70}", flush=True)
+        t0 = time.time()
+        try:
+            fn(quick=args.quick)
+            print(f"[{name}] done in {time.time()-t0:.0f}s")
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+    if failures:
+        print("\nFAILED:", failures)
+        return 1
+    print("\nall benchmarks complete")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,69 @@
+"""Table 12 analogue: serving-time weight memory per method, computed
+from the App.-A bit accounting over the FULL assigned-architecture
+parameter inventories (no allocation — closed form over declared shapes).
+
+Paper numbers: LLaMA-7B PB-LLM 2.36GB / BiLLM 1.83GB / PTQ1.61 1.41GB."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import markdown_table, write_result
+from repro.configs import registry
+from repro.core.baselines.driver import method_bits
+from repro.core.bits import paper_closed_form
+from repro.core.select import is_quantizable
+from repro.models import model as M
+from repro.models.common import Parallel
+
+ARCHS = ["llama-7b", "qwen3-4b", "command-r-35b", "mixtral-8x22b"]
+METHODS = ["fp16", "pbllm", "billm", "ptq161"]
+
+
+def weight_inventory(cfg):
+    """(quantizable weights, exempt params) from the declared tree."""
+    import jax
+    decl = M.declare_params(cfg, Parallel())
+    from repro.models.param import is_leaf
+    q = exempt = 0
+    qk = []
+
+    def visit(path, leaf):
+        nonlocal q, exempt
+        n = int(np.prod(leaf.shape))
+        if is_quantizable(path, leaf, 256):
+            q += n
+            qk.append(leaf.shape[-2:])
+        else:
+            exempt += n
+        return leaf
+    jax.tree_util.tree_map_with_path(visit, decl, is_leaf=is_leaf)
+    return q, exempt, qk
+
+
+def run(quick: bool = False) -> dict:
+    rows = []
+    for arch in (ARCHS[:2] if quick else ARCHS):
+        cfg = registry.get(arch)
+        q, exempt, shapes = weight_inventory(cfg)
+        k, n = shapes[len(shapes) // 2]
+        for m in METHODS:
+            if m == "fp16":
+                bits = 16.0
+            elif m == "ptq161":
+                bits = paper_closed_form(k, n, 0.2).total_bits
+            else:
+                bits = method_bits(m, k, n)
+            gb = (q * bits / 8 + exempt * 2) / 1e9
+            rows.append({"arch": arch, "method": m, "bits": bits,
+                         "weight_gb": gb})
+        print(f"[table12] {arch}: " + ", ".join(
+            f"{r['method']}={r['weight_gb']:.2f}GB"
+            for r in rows[-len(METHODS):]))
+    payload = {"rows": rows}
+    write_result("table12_memory", payload)
+    print(markdown_table(rows, ["arch", "method", "bits", "weight_gb"]))
+    return payload
+
+
+if __name__ == "__main__":
+    run()

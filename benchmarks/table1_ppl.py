@@ -1,0 +1,54 @@
+"""Table 1/6 analogue: PPL of FP vs 2-bit baselines vs sub-2-bit methods
+on the trained tiny-lm subject (WikiText2/C4 → synthetic valid/calib
+splits).  Also reports each method's effective bits/weight (App. A)."""
+from __future__ import annotations
+
+import time
+from benchmarks.common import (get_trained_tiny, markdown_table,
+                               perplexity, quantize, write_result)
+from repro.core.baselines.driver import method_bits
+from repro.core.bits import model_bits
+
+METHODS = ["fp", "rtn-2", "gptq-2", "awq-2", "pbllm", "billm",
+           "ptq161*", "ptq161"]       # * = no preprocessing (paper's *)
+
+
+def bits_of(method: str, qparams) -> float:
+    if method == "fp":
+        return 16.0
+    if method.startswith("ptq161"):
+        return model_bits(qparams)["avg_bits_per_quantized_weight"]
+    return method_bits(method.split("*")[0])
+
+
+def run(quick: bool = False) -> dict:
+    cfg, params, corpus = get_trained_tiny()
+    methods = (["fp", "rtn-2", "pbllm", "ptq161*", "ptq161"] if quick
+               else METHODS)
+    rows = []
+    for m in methods:
+        t0 = time.time()
+        base = m.rstrip("*")
+        pre = (m == "ptq161")          # full PTQ1.61 includes preprocess
+        qp = quantize("ptq161" if base == "ptq161" else base,
+                      cfg, params, corpus, preprocess=pre)
+        row = {
+            "method": m,
+            "bits": bits_of(m, qp),
+            "ppl_valid": perplexity(cfg, qp, corpus, split="valid"),
+            "ppl_calib": perplexity(cfg, qp, corpus, split="calib"),
+            "quant_s": time.time() - t0,
+        }
+        rows.append(row)
+        print(f"[table1] {m:10s} bits={row['bits']:.2f} "
+              f"ppl={row['ppl_valid']:.2f} ({row['quant_s']:.0f}s)")
+    payload = {"rows": rows,
+               "bigram_ceiling": corpus.bigram_ceiling_ppl()}
+    write_result("table1_ppl", payload)
+    print(markdown_table(rows, ["method", "bits", "ppl_valid",
+                                "ppl_calib"]))
+    return payload
+
+
+if __name__ == "__main__":
+    run()

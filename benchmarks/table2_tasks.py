@@ -1,0 +1,35 @@
+"""Table 2 analogue: task-suite accuracy of quantized models.
+
+Offline proxy for PIQA/ARC/HellaSwag/LAMBADA (DESIGN.md §8): next-token
+top-1/top-5 accuracy and LAMBADA-style final-token accuracy on held-out
+synthetic documents.  The paper's claim shape — PTQ1.61 ≥ sub-2-bit
+baselines, close to FP — is what we validate.
+"""
+from __future__ import annotations
+
+from benchmarks.common import (get_trained_tiny, lm_task_suite,
+                               markdown_table, quantize, write_result)
+
+METHODS = ["fp", "rtn-2", "pbllm", "billm", "ptq161*", "ptq161"]
+
+
+def run(quick: bool = False) -> dict:
+    cfg, params, corpus = get_trained_tiny()
+    methods = ["fp", "pbllm", "ptq161"] if quick else METHODS
+    rows = []
+    for m in methods:
+        base = m.rstrip("*")
+        qp = quantize("ptq161" if base == "ptq161" else base, cfg, params,
+                      corpus, preprocess=(m == "ptq161"))
+        row = {"method": m, **lm_task_suite(cfg, qp, corpus)}
+        rows.append(row)
+        print(f"[table2] {m:10s} top1={row['top1']:.3f} "
+              f"top5={row['top5']:.3f} last={row['lambada_last']:.3f}")
+    payload = {"rows": rows}
+    write_result("table2_tasks", payload)
+    print(markdown_table(rows, ["method", "top1", "top5", "lambada_last"]))
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,47 @@
+"""Table 3 analogue: component ablation on the tiny subject.
+
+Paper rows (LLaMA-13B):       ours (tiny-lm, same toggles):
+  none              14664       binarize-only (no mask, analytic α)
+  +mask              1370       structured mask only
+  preprocess-only     570       preprocess, then binarize-only
+  +mask+learn        14.2       mask + block-wise learned scales
+  full                9.7       mask + learn + preprocess
+
+The validated claim is the ORDERING (each component helps, learnable
+scales are the big step), not the absolute numbers.
+"""
+from __future__ import annotations
+
+from benchmarks.common import (get_trained_tiny, markdown_table,
+                               perplexity, quantize, write_result)
+
+ROWS = [
+    ("none", dict(use_mask=False, learn_scales=False), False),
+    ("mask", dict(use_mask=True, learn_scales=False), False),
+    ("preprocess", dict(use_mask=False, learn_scales=False), True),
+    ("mask+learn", dict(use_mask=True, learn_scales=True), False),
+    ("full", dict(use_mask=True, learn_scales=True), True),
+]
+
+
+def run(quick: bool = False) -> dict:
+    cfg, params, corpus = get_trained_tiny()
+    fp_ppl = perplexity(cfg, params, corpus)
+    rows = [{"config": "fp16", "ppl_valid": fp_ppl, "ppl_calib":
+             perplexity(cfg, params, corpus, split="calib")}]
+    for name, overrides, pre in ROWS:
+        qp = quantize("ptq161", cfg, params, corpus, preprocess=pre,
+                      qcfg_overrides=overrides)
+        row = {"config": name,
+               "ppl_valid": perplexity(cfg, qp, corpus, split="valid"),
+               "ppl_calib": perplexity(cfg, qp, corpus, split="calib")}
+        rows.append(row)
+        print(f"[table3] {name:12s} ppl={row['ppl_valid']:.2f}")
+    payload = {"rows": rows}
+    write_result("table3_ablation", payload)
+    print(markdown_table(rows, ["config", "ppl_valid", "ppl_calib"]))
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,41 @@
+"""Table 8 analogue: resource requirements of each quantization stage
+(wall time + peak RSS) on the tiny subject — the paper's point is that
+PTQ1.61's extra preprocessing cost stays in the PTQ class, far below QAT."""
+from __future__ import annotations
+
+import resource
+import time
+
+from benchmarks.common import (get_trained_tiny, markdown_table, quantize,
+                               write_result)
+
+
+def _rss_mb() -> float:
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024
+
+
+def run(quick: bool = False) -> dict:
+    cfg, params, corpus = get_trained_tiny()
+    stages = [("datafree_init", "ptq161",
+               dict(qcfg_overrides={"learn_scales": False, "steps": 0})),
+              ("blockwise_opt", "ptq161", {}),
+              ("preprocess+full", "ptq161", dict(preprocess=True))]
+    if quick:
+        stages = stages[:2]
+    rows = []
+    for name, method, kw in stages:
+        t0 = time.time()
+        quantize(method, cfg, params, corpus, **kw)
+        rows.append({"stage": name, "wall_s": time.time() - t0,
+                     "peak_rss_mb": _rss_mb()})
+        print(f"[table8] {name:16s} {rows[-1]['wall_s']:.1f}s "
+              f"rss={rows[-1]['peak_rss_mb']:.0f}MB")
+    payload = {"rows": rows, "note": "paper: PTQ1.61 2h vs OneBit 24d "
+               "on LLaMA-7B; same orders-of-magnitude gap applies"}
+    write_result("table8_resources", payload)
+    print(markdown_table(rows, ["stage", "wall_s", "peak_rss_mb"]))
+    return payload
+
+
+if __name__ == "__main__":
+    run()

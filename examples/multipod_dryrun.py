@@ -1,0 +1,36 @@
+"""Programmatic dry-run of one (arch × shape × mesh) cell.
+
+    python examples/multipod_dryrun.py --arch mixtral-8x22b --cell decode_32k
+
+(Sets the 512-fake-device XLA flag itself, so run it as a fresh process —
+not from inside an existing jax session.)
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.dryrun import run_cell   # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b")
+    ap.add_argument("--cell", default="decode_32k")
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod"])
+    args = ap.parse_args()
+
+    rec = run_cell(args.arch, args.cell, args.mesh, force=True)
+    print(json.dumps({k: v for k, v in rec.items()
+                      if k in ("status", "preset", "roofline",
+                               "useful_flops_ratio", "compile_s")},
+                     indent=2, default=str))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""The paper's full pipeline on a trained subject: restorative-LoRA
+preprocessing → structured mask → block-wise scale learning → packed
+1.61-bit model → PPL comparison against the FP teacher.
+
+    PYTHONPATH=src:. python examples/quantize_and_eval.py [--quick]
+
+(Reuses the benchmark substrate; the first run trains the subject for a
+few hundred steps and caches it under results/bench/.)
+"""
+import argparse
+
+from benchmarks.common import (get_trained_tiny, perplexity, quantize)
+from repro.core.bits import model_bits
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="skip preprocessing (PTQ1.61* variant)")
+    args = ap.parse_args()
+
+    cfg, params, corpus = get_trained_tiny()
+    fp = perplexity(cfg, params, corpus)
+    print(f"fp16 ppl: {fp:.2f} (bigram ceiling "
+          f"{corpus.bigram_ceiling_ppl():.2f})")
+
+    qp = quantize("ptq161", cfg, params, corpus,
+                  preprocess=not args.quick)
+    rep = model_bits(qp)
+    q = perplexity(cfg, qp, corpus)
+    tag = "PTQ1.61*" if args.quick else "PTQ1.61"
+    print(f"{tag} ppl: {q:.2f} at "
+          f"{rep['avg_bits_per_quantized_weight']:.3f} bits/weight "
+          f"({rep['quantized_weights']:,} weights)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Serve a PTQ1.61-quantized model with continuous batching.
+
+    PYTHONPATH=src python examples/serve_quantized.py [--kernel]
+
+Quantizes the tiny LM data-free, then runs a batch of variable-length
+requests through the slot-based engine (ragged positions, prefill
+buckets, greedy sampling).  --kernel dispatches the fused Pallas
+mixed_matmul in interpret mode.
+"""
+import argparse
+
+from repro.launch.serve import parse_args, run
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--kernel", action="store_true")
+    ap.add_argument("--requests", type=int, default=6)
+    args = ap.parse_args()
+
+    argv = ["--arch", "tiny-lm", "--quantize", "datafree",
+            "--requests", str(args.requests), "--slots", "3",
+            "--max-seq", "128", "--max-new", "12",
+            "--multiple", "16", "--min-dim", "64"]
+    if args.kernel:
+        argv.append("--kernel")
+    out = run(parse_args(argv))
+    assert out["all_done"]
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""AWQ (Lin et al., 2023): activation-aware weight scaling + RTN.
+
+Per-input-channel scales s = stat^α lifted onto the weights before
+quantization and divided back after; α grid-searched to minimize the
+layer-output MSE on calibration samples.  No mask, no learned factors —
+the paper's App.-B comparison point.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.baselines.rtn import rtn_quantize
+
+
+def awq_quantize(w: jax.Array, act_absmean: Optional[np.ndarray], bits: int,
+                 x_sample: Optional[np.ndarray] = None,
+                 grid: int = 20) -> jax.Array:
+    """Fake-quant w (K, N) with the best activation-aware scaling."""
+    if act_absmean is None:
+        return rtn_quantize(w, bits)
+    stat = jnp.asarray(act_absmean, jnp.float32)
+    stat = stat / (jnp.mean(stat) + 1e-8) + 1e-4
+    if x_sample is not None and x_sample.size:
+        x = jnp.asarray(x_sample, jnp.float32)
+    else:
+        x = None
+    wf = w.astype(jnp.float32)
+
+    best = (jnp.inf, rtn_quantize(w, bits))
+    for g in range(grid):
+        alpha = g / grid
+        s = jnp.power(stat, alpha)[:, None]       # (K,1)
+        wq = rtn_quantize(wf * s, bits).astype(jnp.float32) / s
+        if x is None:
+            err = jnp.mean(jnp.square(wq - wf))
+        else:
+            err = jnp.mean(jnp.square(x @ wq - x @ wf))
+        err = float(err)
+        if err < best[0]:
+            best = (err, wq.astype(w.dtype))
+    return best[1]
+
+
+def bits_per_weight(bits: int, k: int, n: int) -> float:
+    # b-bit codes + fp16 scale/zero per output channel + fp16 s per input ch.
+    return bits + (2 * n + k) * 16 / (k * n)

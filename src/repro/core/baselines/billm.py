@@ -1,0 +1,70 @@
+"""BiLLM (Huang et al., 2024): Hessian-guided residual binarization.
+
+Three weight groups per layer, binarized separately:
+  * salient (top fraction by Hessian sensitivity s_i = h_ii·w², taken
+    column-structured like the reference implementation's row selection):
+    RESIDUAL binarization — binarize, then binarize the residual again
+    (effectively ~2 bits of expressiveness on salient weights);
+  * non-salient split by an optimal |w| threshold ("bell-shape" split)
+    into concentrated / sparse groups, each with its own analytic α.
+
+Equivalent storage (App. A): 1-bit codes + group masks ≈ 2.1 b/w — above
+2 bits despite the "1-bit" branding, which is PTQ1.61's critique.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _binarize(w: jax.Array, mask: jax.Array):
+    """α over masked entries (per output channel), sign reconstruction."""
+    cnt = jnp.maximum(jnp.sum(mask, axis=0, keepdims=True), 1)
+    alpha = jnp.sum(jnp.where(mask, jnp.abs(w), 0.0), axis=0,
+                    keepdims=True) / cnt
+    return jnp.where(w >= 0, alpha, -alpha)
+
+
+def billm_quantize(w: jax.Array, hessian_diag: Optional[np.ndarray],
+                   salient_frac: float = 0.1, n_split: int = 16) -> jax.Array:
+    """Fake-quant w (K, N)."""
+    wf = w.astype(jnp.float32)
+    k, n = wf.shape
+    if hessian_diag is None:
+        sens = jnp.mean(jnp.square(wf), axis=1)
+    else:
+        sens = jnp.asarray(hessian_diag, jnp.float32) * jnp.mean(
+            jnp.square(wf), axis=1)
+    k_sal = max(1, int(round(salient_frac * k)))
+    _, sal_idx = jax.lax.top_k(sens, k_sal)
+    sal_rows = jnp.zeros((k,), bool).at[sal_idx].set(True)[:, None]
+
+    # salient: residual binarization (two passes)
+    b1 = _binarize(wf, sal_rows)
+    b2 = _binarize(wf - b1, sal_rows)
+    sal = b1 + b2
+
+    # non-salient: optimal magnitude split into two groups
+    nonsal = ~sal_rows & jnp.ones_like(wf, bool)
+    absw = jnp.abs(jnp.where(nonsal, wf, jnp.nan))
+    lo = jnp.nanmin(absw)
+    hi = jnp.nanmax(absw)
+    best_err, best = jnp.inf, None
+    for i in range(1, n_split):
+        t = lo + (hi - lo) * i / n_split
+        g_hi = nonsal & (jnp.abs(wf) >= t)
+        g_lo = nonsal & (jnp.abs(wf) < t)
+        rec = jnp.where(g_hi, _binarize(wf, g_hi), _binarize(wf, g_lo))
+        err = float(jnp.sum(jnp.where(nonsal, (rec - wf) ** 2, 0.0)))
+        if err < best_err:
+            best_err, best = err, rec
+
+    return jnp.where(sal_rows, sal, best).astype(w.dtype)
+
+
+def bits_per_weight() -> float:
+    # paper App. A: weight 1.0 + additional 0.1 + unstructured group mask 1.0
+    return 2.1

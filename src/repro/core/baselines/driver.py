@@ -1,0 +1,121 @@
+"""Sequential calibrated driver for the baseline quantizers.
+
+Mirrors the PTQ1.61 pipeline (block-by-block, stats on the propagated
+quantized stream) but each quantizable leaf becomes a FAKE-QUANT dense
+tensor — exactly how the paper evaluates the baselines (their unstructured
+masks aren't servable sub-2-bit, which is the paper's point).
+
+Methods: rtn-{2,3,4,8} | gptq-{2,3,4} | awq-2 | pbllm | billm.
+"""
+from __future__ import annotations
+
+import functools
+import re
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.baselines import awq, billm, gptq, pbllm, rtn
+from repro.core.calibrate import collect_wrappers
+from repro.core.pipeline import _block_forward, tree_slice, tree_stack
+from repro.core.select import map_quantizable
+from repro.models import model as M
+from repro.models.common import Parallel
+
+Tree = Any
+
+
+def parse_method(method: str):
+    m = re.fullmatch(r"(rtn|gptq|awq)-(\d+)", method)
+    if m:
+        return m.group(1), int(m.group(2))
+    if method in ("pbllm", "billm"):
+        return method, None
+    raise ValueError(f"unknown baseline {method!r}")
+
+
+def method_bits(method: str, k: int = 4096, n: int = 4096) -> float:
+    kind, b = parse_method(method)
+    if kind == "rtn":
+        return rtn.bits_per_weight(b, k, n)
+    if kind == "gptq":
+        return gptq.bits_per_weight(b, k, n)
+    if kind == "awq":
+        return awq.bits_per_weight(b, k, n)
+    if kind == "pbllm":
+        return pbllm.bits_per_weight(k=k, n=n)
+    return billm.bits_per_weight()
+
+
+def quantize_model_baseline(
+        cfg: ArchConfig, par: Parallel, params: Tree,
+        calib_batches: List[Dict[str, jax.Array]], method: str,
+        min_dim: int = 64,
+        log: Optional[Callable[[str], None]] = None) -> Tree:
+    kind, b = parse_method(method)
+    _log = log or (lambda s: None)
+    needs_h = kind in ("gptq", "billm")
+    needs_x = kind == "awq"
+
+    x_q = [M.embed_tokens(cfg, params, batch["tokens"])
+           for batch in calib_batches]
+
+    qstages: List[List[List[Tree]]] = []
+    for si, stage in enumerate(cfg.stages):
+        qstages.append([[] for _ in stage.pattern])
+        for layer in range(stage.repeats):
+            for pi, bk in enumerate(stage.pattern):
+                fp_block = tree_slice(params["stages"][si][pi], layer)
+                fwd = _block_forward(cfg, par, bk)
+                wrappers = collect_wrappers(
+                    lambda p, x: fwd(p, x), fp_block, x_q, min_dim=min_dim,
+                    collect_hessian=needs_h, sample_rows=256 if needs_x else 0)
+
+                def qfn(path, w):
+                    key = jax.tree_util.keystr(path)
+                    sw = wrappers.get(key)
+                    if w.ndim > 2:   # stacked experts: apply per slice
+                        return jnp.stack([
+                            _quant_one(kind, b, w[i],
+                                       None if sw is None else sw, i)
+                            for i in range(w.shape[0])])
+                    return _quant_one(kind, b, w, sw, None)
+
+                q_block = map_quantizable(fp_block, qfn, min_dim=min_dim)
+                fwd_j = jax.jit(fwd)
+                x_q = [fwd_j(q_block, x) for x in x_q]
+                qstages[si][pi].append(q_block)
+                _log(f"[{method}] stage{si} layer{layer} kind={bk}")
+
+    qparams = dict(params)
+    qparams["stages"] = [tuple(tree_stack(qstages[si][pi])
+                               for pi in range(len(st.pattern)))
+                         for si, st in enumerate(cfg.stages)]
+    return qparams
+
+
+def _quant_one(kind: str, b: Optional[int], w, sw, expert: Optional[int]):
+    absmean = None if sw is None or sw.sum_abs is None else sw.absmean
+    if absmean is not None and expert is not None:
+        absmean = absmean[expert]
+    if kind == "rtn":
+        return rtn.rtn_quantize(w, b)
+    if kind == "gptq":
+        h = None if sw is None or sw.h is None else sw.hessian
+        if h is not None and expert is not None:
+            h = None   # per-expert Hessian not tracked; fall back
+        return gptq.gptq_quantize(w, h, b)
+    if kind == "awq":
+        xs = None if sw is None else sw.x_sample
+        return awq.awq_quantize(w, absmean, b, x_sample=xs)
+    if kind == "pbllm":
+        return pbllm.pbllm_quantize(w)
+    if kind == "billm":
+        hd = None
+        if sw is not None and sw.h is not None:
+            hd = np.diag(sw.hessian)
+        return billm.billm_quantize(w, hd)
+    raise ValueError(kind)

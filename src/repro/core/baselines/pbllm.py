@@ -1,0 +1,47 @@
+"""PB-LLM (Shang et al., 2023): partially-binarized LLM.
+
+Top-10% |w|-magnitude weights (UNSTRUCTURED — scattered positions) kept at
+8-bit RTN; the remaining 90% binarized with per-output-channel analytic α
+computed over the non-salient weights only.
+
+The unstructured mask costs a full extra 1 bit/weight (uncompressible
+bitmap, App. A):  b = 0.1·8 + 0.9·1 + 1 = 2.7 b/w — the paper's central
+criticism that PTQ1.61's structured mask removes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pbllm_quantize(w: jax.Array, salient_frac: float = 0.1,
+                   salient_bits: int = 8) -> jax.Array:
+    """Fake-quant w (K, N)."""
+    wf = w.astype(jnp.float32)
+    k, n = wf.shape
+    n_sal = max(1, int(round(salient_frac * k * n)))
+    thresh = jnp.sort(jnp.abs(wf).reshape(-1))[-n_sal]
+    mask = jnp.abs(wf) >= thresh                    # unstructured (K,N)
+
+    # salient: 8-bit RTN on the salient values (per output channel grid)
+    qmax = 2 ** salient_bits - 1
+    big = jnp.where(mask, wf, 0.0)
+    wmax = jnp.max(jnp.abs(big), axis=0, keepdims=True)
+    scale = jnp.maximum(2 * wmax / qmax, 1e-8)
+    q = jnp.clip(jnp.round(wf / scale) + (qmax + 1) // 2, 0, qmax)
+    sal = (q - (qmax + 1) // 2) * scale
+
+    # non-salient: binarize, α over non-salient entries only
+    cnt = jnp.maximum(jnp.sum(~mask, axis=0, keepdims=True), 1)
+    alpha = jnp.sum(jnp.where(mask, 0.0, jnp.abs(wf)), axis=0,
+                    keepdims=True) / cnt
+    bin_ = jnp.where(wf >= 0, alpha, -alpha)
+
+    return jnp.where(mask, sal, bin_).astype(w.dtype)
+
+
+def bits_per_weight(salient_frac: float = 0.1, salient_bits: int = 8,
+                    k: int = 4096, n: int = 4096) -> float:
+    return (salient_frac * salient_bits + (1 - salient_frac) * 1.0
+            + 1.0                       # unstructured mask bitmap
+            + 2 * n * 16 / (k * n))     # scales

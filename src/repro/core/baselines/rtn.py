@@ -1,0 +1,26 @@
+"""Round-to-nearest b-bit quantization (per output channel, asymmetric).
+
+The weakest baseline in the paper's tables (2-bit RTN ≈ collapse); also
+the primitive reused by PB-LLM (8-bit salient) and AWQ (post-scaling RTN).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rtn_quantize(w: jax.Array, bits: int) -> jax.Array:
+    """Fake-quant w (…, K, N) with per-output-channel (N) min/max grid."""
+    wf = w.astype(jnp.float32)
+    qmax = 2 ** bits - 1
+    wmin = jnp.min(wf, axis=-2, keepdims=True)
+    wmax = jnp.max(wf, axis=-2, keepdims=True)
+    scale = jnp.maximum((wmax - wmin) / qmax, 1e-8)
+    zero = jnp.clip(jnp.round(-wmin / scale), 0, qmax)
+    q = jnp.clip(jnp.round(wf / scale) + zero, 0, qmax)
+    return ((q - zero) * scale).astype(w.dtype)
+
+
+def bits_per_weight(bits: int, k: int, n: int) -> float:
+    """b-bit codes + fp16 scale/zero per output channel."""
+    return bits + (2 * n * 16) / (k * n)

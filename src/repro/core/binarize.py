@@ -1,0 +1,52 @@
+"""Binarization with learnable scaling factors (paper §3.1, §3.3, Eq. 9).
+
+Analytic XNOR-Net initialization:  α_w = ‖w‖₁ / n_w  per output channel.
+PTQ1.61 form (Eq. 9):
+
+    W_q' = (α_r1 × α_r2) ∘ (α_s · sign(W))
+
+with α_s, α_r1 per *output* channel (N,) and α_r2 per *input* channel
+(K,) — the rank-1 (α_r1 × α_r2) field captures angular bias that a pure
+row scale cannot (RBNN/LRQuant motivation).  α_r1/α_r2 initialize at 1 so
+the init exactly matches the analytic binarization; the block-wise
+optimizer (repro.core.blockwise) then learns all three.
+
+Weight convention is (K=in, N=out) throughout — the paper's (n×m) rows
+are our columns.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def analytic_alpha(w: jax.Array) -> jax.Array:
+    """α per output channel: mean |w| over the input dim. w: (..., K, N)."""
+    return jnp.mean(jnp.abs(w.astype(jnp.float32)), axis=-2)
+
+
+def binarize_init(w: jax.Array) -> Dict[str, jax.Array]:
+    """Signs + scale init for a (…, K, N) weight slice."""
+    return {
+        "sign": jnp.where(w >= 0, 1.0, -1.0).astype(jnp.bfloat16),
+        "alpha_s": analytic_alpha(w),                       # (..., N)
+        "alpha_r1": jnp.ones(w.shape[:-2] + (w.shape[-1],), jnp.float32),
+        "alpha_r2": jnp.ones(w.shape[:-2] + (w.shape[-2],), jnp.float32),
+    }
+
+
+def dequant_binary(sign: jax.Array, alpha_s: jax.Array, alpha_r1: jax.Array,
+                   alpha_r2: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+    """Eq. 9: (α_r1 × α_r2) ∘ (α_s sign(W)) -> (..., K, N)."""
+    col = (alpha_s * alpha_r1)[..., None, :]      # (..., 1, N)
+    row = alpha_r2[..., :, None]                  # (..., K, 1)
+    return (sign.astype(jnp.float32) * col * row).astype(dtype)
+
+
+def binarize_rtn(w: jax.Array) -> jax.Array:
+    """Plain analytic binarization (the paper's Table-3 first row)."""
+    b = binarize_init(w)
+    return dequant_binary(b["sign"], b["alpha_s"], b["alpha_r1"], b["alpha_r2"],
+                          dtype=w.dtype)

@@ -1,0 +1,110 @@
+"""Calibration-time activation statistics capture.
+
+The structured mask (paper §3.2) ranks *input channels of each linear* by
+E[|x_i|] over the calibration set.  We capture those statistics exactly —
+per linear, at its real input (post-norm, post-residual, per-expert) — by
+swapping every quantizable weight for a recording wrapper and running the
+model **eagerly** over calibration batches.  The wrapper computes the same
+matmul, so the forward is unchanged.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.select import map_quantizable
+
+Tree = Any
+
+
+class StatsWeight:
+    """Drop-in weight that records per-input-channel E[|x|] and E[x²],
+    optionally the full input Gram matrix Σ xᵀx (GPTQ/BiLLM Hessian
+    H = 2·Σ xᵀx) and a capped sample of raw input rows (AWQ grid search)."""
+
+    def __init__(self, w, collect_hessian: bool = False,
+                 sample_rows: int = 0):
+        self.w = w
+        self.sum_abs = None
+        self.sum_sq = None
+        self.count = 0
+        self.collect_hessian = collect_hessian
+        self.h = None
+        self.sample_rows = sample_rows
+        self.samples = []
+
+    def _record(self, x, axes):
+        xa = jnp.abs(x.astype(jnp.float32))
+        s_abs = np.asarray(jnp.sum(xa, axis=axes))
+        s_sq = np.asarray(jnp.sum(jnp.square(x.astype(jnp.float32)), axis=axes))
+        n = int(np.prod([x.shape[a] for a in axes]))
+        if self.sum_abs is None:
+            self.sum_abs, self.sum_sq = s_abs, s_sq
+        else:
+            self.sum_abs = self.sum_abs + s_abs
+            self.sum_sq = self.sum_sq + s_sq
+        self.count += n
+        if self.collect_hessian and x.ndim >= 2:
+            flat = np.asarray(x.astype(jnp.float32)).reshape(-1, x.shape[-1])
+            g = flat.T @ flat
+            self.h = g if self.h is None else self.h + g
+        if self.sample_rows and sum(s.shape[0] for s in self.samples) < self.sample_rows:
+            flat = np.asarray(x.astype(jnp.float32)).reshape(-1, x.shape[-1])
+            self.samples.append(flat[: self.sample_rows])
+
+    @property
+    def hessian(self) -> np.ndarray:
+        return 2.0 * self.h / max(1, self.count)
+
+    @property
+    def x_sample(self) -> np.ndarray:
+        return np.concatenate(self.samples, 0) if self.samples else None
+
+    def __matmul_x__(self, x):
+        self._record(x, tuple(range(x.ndim - 1)))
+        return jnp.einsum("...k,kn->...n", x, self.w.astype(x.dtype))
+
+    def __expert_matmul__(self, x):
+        # per-expert channel stats: reduce over the capacity dim only
+        self._record(x, (1,))
+        return jnp.einsum("eck,ekn->ecn", x, self.w.astype(x.dtype))
+
+    @property
+    def absmean(self) -> np.ndarray:
+        return self.sum_abs / max(1, self.count)
+
+    @property
+    def sqmean(self) -> np.ndarray:
+        return self.sum_sq / max(1, self.count)
+
+
+def collect_stats(forward, params: Tree, batches: List[Dict[str, jax.Array]],
+                  min_dim: int = 64) -> Dict[str, np.ndarray]:
+    """Run `forward(wrapped_params, batch)` eagerly per batch; return
+    {keystr(path): absmean (…,K)} for every quantizable leaf."""
+    w = collect_wrappers(forward, params, batches, min_dim=min_dim)
+    return {k: np.asarray(sw.absmean) for k, sw in w.items()
+            if sw.sum_abs is not None}
+
+
+def collect_wrappers(forward, params: Tree,
+                     batches: List[Dict[str, jax.Array]], *,
+                     min_dim: int = 64, collect_hessian: bool = False,
+                     sample_rows: int = 0) -> Dict[str, StatsWeight]:
+    """Full-detail variant: returns the wrappers themselves (absmean,
+    sqmean, Hessian, input samples) per quantizable path."""
+    wrappers: Dict[str, StatsWeight] = {}
+
+    def wrap(path, leaf):
+        sw = StatsWeight(leaf, collect_hessian=collect_hessian,
+                         sample_rows=sample_rows)
+        wrappers[jax.tree_util.keystr(path)] = sw
+        return sw
+
+    wrapped = map_quantizable(params, wrap, min_dim=min_dim)
+    for batch in batches:
+        forward(wrapped, batch)
+    return wrappers

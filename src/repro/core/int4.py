@@ -1,0 +1,35 @@
+"""4-bit quantization of salient input channels (paper §3.2, App. A).
+
+Per *input channel* asymmetric min/max quantization: one fp16 scale and
+one zero-point per salient channel (the App.-A accounting's
+"0.2·4096 zero-points").  q = clamp(round(w/s) + z, 0, 15).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+QMAX = 15
+
+
+def quantize_int4(w: jax.Array) -> Dict[str, jax.Array]:
+    """w: (..., k_s, N) salient slice -> {q (uint8 codes), s, z per channel}."""
+    wf = w.astype(jnp.float32)
+    wmin = jnp.min(wf, axis=-1)                      # (..., k_s)
+    wmax = jnp.max(wf, axis=-1)
+    scale = jnp.maximum((wmax - wmin) / QMAX, 1e-8)
+    zero = jnp.clip(jnp.round(-wmin / scale), 0, QMAX)
+    q = jnp.clip(jnp.round(wf / scale[..., None]) + zero[..., None], 0, QMAX)
+    return {"q": q.astype(jnp.uint8), "s": scale, "z": zero}
+
+
+def dequant_int4(q: jax.Array, s: jax.Array, z: jax.Array,
+                 dtype=jnp.bfloat16) -> jax.Array:
+    return ((q.astype(jnp.float32) - z[..., None]) * s[..., None]).astype(dtype)
+
+
+def fake_quant_int4(w: jax.Array) -> jax.Array:
+    d = quantize_int4(w)
+    return dequant_int4(d["q"], d["s"], d["z"], dtype=w.dtype)

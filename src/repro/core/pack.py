@@ -1,0 +1,77 @@
+"""Bit-exact packing for sub-2-bit storage.
+
+* 1-bit weights: 8 signs per uint8 byte along the input (K) dimension —
+  bit j of byte i is the sign of channel k = 8*i + j (1 = +1, 0 = -1).
+* 4-bit weights: two nibbles per uint8 byte along K — low nibble is
+  channel 2*i, high nibble 2*i+1.
+
+Both layouts keep the *output* (N) dimension contiguous, which is the
+layout the Pallas kernels stream (HBM→VMEM transfers of packed bytes,
+unpack in VMEM).  All functions are shape-polymorphic in trailing dims so
+stacked-layer (L, K, N) and per-expert (E, K, N) weights pack the same way.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_BIT_SHIFTS = tuple(range(8))
+
+
+def pack_bits(signs: jax.Array, axis: int = -2) -> jax.Array:
+    """Pack ±1 (or bool) signs along `axis` (must be a multiple of 8).
+
+    signs: (..., K, N) float/int/bool -> (..., K//8, N) uint8.
+    """
+    axis = axis % signs.ndim
+    k = signs.shape[axis]
+    assert k % 8 == 0, f"K={k} not a multiple of 8"
+    bits = (signs > 0).astype(jnp.uint8)
+    shp = signs.shape[:axis] + (k // 8, 8) + signs.shape[axis + 1:]
+    bits = bits.reshape(shp)
+    weights = jnp.asarray([1 << s for s in _BIT_SHIFTS], jnp.uint8)
+    bshape = (1,) * (axis + 1) + (8,) + (1,) * (signs.ndim - axis - 1)
+    return jnp.sum(bits * weights.reshape(bshape), axis=axis + 1,
+                   dtype=jnp.uint8)
+
+
+def unpack_bits(packed: jax.Array, axis: int = -2,
+                dtype=jnp.bfloat16) -> jax.Array:
+    """uint8 (..., K//8, N) -> ±1 in `dtype` (..., K, N)."""
+    axis = axis % packed.ndim
+    shifts = jnp.arange(8, dtype=jnp.uint8)
+    bshape = (1,) * (axis + 1) + (8,) + (1,) * (packed.ndim - axis - 1)
+    bits = (jnp.expand_dims(packed, axis + 1) >> shifts.reshape(bshape)) & 1
+    out_shape = packed.shape[:axis] + (packed.shape[axis] * 8,) + packed.shape[axis + 1:]
+    bits = bits.reshape(out_shape)
+    return (bits.astype(dtype) * 2 - 1)
+
+
+def pack_nibbles(q: jax.Array, axis: int = -2) -> jax.Array:
+    """Pack uint4 values (0..15) along `axis` (multiple of 2) into uint8."""
+    axis = axis % q.ndim
+    k = q.shape[axis]
+    assert k % 2 == 0, f"K={k} not a multiple of 2"
+    q = q.astype(jnp.uint8)
+    shp = q.shape[:axis] + (k // 2, 2) + q.shape[axis + 1:]
+    q = q.reshape(shp)
+    lo = jax.lax.index_in_dim(q, 0, axis + 1, keepdims=False)
+    hi = jax.lax.index_in_dim(q, 1, axis + 1, keepdims=False)
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def unpack_nibbles(packed: jax.Array, axis: int = -2,
+                   dtype=jnp.bfloat16) -> jax.Array:
+    """uint8 (..., K//2, N) -> values 0..15 in `dtype` (..., K, N)."""
+    axis = axis % packed.ndim
+    lo = packed & 0xF
+    hi = packed >> 4
+    stacked = jnp.stack([lo, hi], axis=axis + 1)
+    out_shape = packed.shape[:axis] + (packed.shape[axis] * 2,) + packed.shape[axis + 1:]
+    return stacked.reshape(out_shape).astype(dtype)
+
+
+def packed_nbytes(k_salient: int, k_binary: int, n: int) -> int:
+    """Storage bytes for one quantized (K, N) matrix (weights only)."""
+    return (k_binary // 8) * n + (k_salient // 2) * n

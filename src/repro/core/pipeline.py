@@ -1,0 +1,123 @@
+"""End-to-end PTQ1.61 quantization driver (paper Fig. 2).
+
+Sequential block-by-block protocol with error propagation:
+
+  1. (optional) quantization preprocessing — restorative LoRA merge
+     (repro.core.preprocess, paper §3.4);
+  2. embed the calibration segments -> FP stream X and quantized stream X_q;
+  3. per block, in depth order:
+       a. capture per-linear input-channel statistics on the X_q stream
+          (what the deployed layer will actually see),
+       b. structured mask + int4/binary initial quantization (§3.2),
+       c. block-wise scale optimization (§3.3, Eq. 7),
+       d. propagate both streams through FP / quantized block;
+  4. restack per-layer QLinears into the scan layout.
+
+`quantize_params_data_free` is the fast path (|w|-magnitude saliency, no
+optimization) used for serving-shape generation and smoke tests of the
+non-dense families; the full driver is exercised on the tiny LM subjects
+(benchmarks/table1, table3).
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core import blockwise
+from repro.core.calibrate import collect_stats
+from repro.core.qlinear import QLinear, QuantConfig, quantize_linear
+from repro.core.select import map_quantizable
+from repro.models import model as M
+from repro.models import transformer as T
+from repro.models.common import Parallel
+
+Tree = Any
+
+
+def tree_slice(tree: Tree, i: int) -> Tree:
+    return jax.tree.map(lambda a: a[i], tree)
+
+
+def tree_stack(trees: List[Tree]) -> Tree:
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def quantize_params_data_free(params: Tree, qcfg: QuantConfig,
+                              min_dim: int = 64) -> Tree:
+    """Mask from |w| magnitude, analytic scales, no learning.  Works for
+    every architecture (incl. stacked layer/expert weights)."""
+    def q(_, w):
+        return quantize_linear(w, None, qcfg)
+    return map_quantizable(params, q, min_dim=min_dim)
+
+
+def _block_forward(cfg: ArchConfig, par: Parallel, kind: str):
+    def fn(block_params, x):
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        y, _ = T.block_full(cfg, par, kind, block_params, x, positions,
+                            causal=True)
+        return y
+    return fn
+
+
+def quantize_model_ptq161(
+        cfg: ArchConfig, par: Parallel, params: Tree,
+        calib_batches: List[Dict[str, jax.Array]], qcfg: QuantConfig,
+        min_dim: int = 64, log: Optional[Callable[[str], None]] = None,
+) -> Tree:
+    """Full PTQ1.61 over a decoder-only model.  Returns params with every
+    quantizable leaf replaced by a learned QLinear."""
+    assert not cfg.enc_dec, "calibrated PTQ driver targets decoder-only LMs"
+    t0 = time.time()
+    _log = log or (lambda s: None)
+
+    # calibration streams
+    x_fp = [M.embed_tokens(cfg, params, b["tokens"]) for b in calib_batches]
+    x_q = [x for x in x_fp]
+
+    qstages: List[List[List[Tree]]] = []  # [stage][pattern_pos][layer]
+    for si, stage in enumerate(cfg.stages):
+        qstages.append([[] for _ in stage.pattern])
+        for layer in range(stage.repeats):
+            for pi, kind in enumerate(stage.pattern):
+                fp_block = tree_slice(params["stages"][si][pi], layer)
+                fwd = _block_forward(cfg, par, kind)
+
+                # (a) input-channel stats on the quantized stream
+                stats = collect_stats(lambda p, b: fwd(p, b), fp_block,
+                                      x_q, min_dim=min_dim)
+
+                # (b) initial quantization
+                def qinit(path, w):
+                    key = jax.tree_util.keystr(path)
+                    s = stats.get(key)
+                    s = None if s is None else jnp.asarray(s)
+                    return quantize_linear(w, s, qcfg)
+                q_block = map_quantizable(fp_block, qinit, min_dim=min_dim)
+
+                # (c) scale learning (Eq. 7)
+                q_block = blockwise.optimize_block_scales(
+                    fwd, fp_block, q_block, x_fp, x_q, qcfg)
+
+                # (d) propagate (block output + residual handled inside
+                # block_full, which already returns x + f(x))
+                fwd_j = jax.jit(fwd)
+                x_fp = [fwd_j(fp_block, x) for x in x_fp]
+                x_q = [fwd_j(q_block, x) for x in x_q]
+
+                qstages[si][pi].append(q_block)
+                _log(f"stage{si} layer{layer} kind={kind} "
+                     f"({time.time()-t0:.1f}s)")
+
+    qparams = dict(params)
+    qparams["stages"] = [tuple(tree_stack(qstages[si][pi])
+                               for pi in range(len(stage.pattern)))
+                         for si, stage in enumerate(cfg.stages)]
+    return qparams

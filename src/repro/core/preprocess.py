@@ -1,0 +1,129 @@
+"""Quantization preprocessing via restorative LoRA (paper §3.4, App. D).
+
+Pretrained checkpoints have *scattered* salient weights, which per-channel
+(row-wise) scale assignment handles badly.  Before quantization we:
+
+  1. build an *initial quantized* model Q0(W) (data-free PTQ1.61 init);
+  2. attach rank-r LoRA adapters to every quantizable linear and train
+     them so Q0(W) + BA recovers the pretrained model's behaviour on
+     pretraining-distribution data (LM loss; the paper uses RedPajama —
+     here the synthetic corpus, DESIGN.md §8);
+  3. merge the learned low-rank compensation into the **full-precision**
+     weights: W' = W + BA.
+
+Because BA is low-rank, the compensation concentrates salient mass into a
+few rows — the "row-wise pattern" of paper Fig. 4 — which then quantizes
+better under any per-channel PTQ method (paper Fig. 5 shows the same merge
+also lifts GPTQ/PB-LLM/BiLLM; benchmarks/fig5_preprocess.py reproduces).
+
+Unlike post-quantization PEFT (QLoRA et al.) nothing extra ships at
+inference: the adapters are merged *before* quantization (paper App. D.4).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.pipeline import quantize_params_data_free
+from repro.core.qlinear import QLinear, QuantConfig
+from repro.core.select import map_quantizable
+from repro.models import model as M
+from repro.models.common import Parallel
+from repro.optim.adamw import AdamW
+
+Tree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class PreprocessConfig:
+    rank: int = 32                # paper: rank 32
+    steps: int = 10_000           # paper: 10K steps (tests use ~50)
+    lr: float = 1e-4
+    lora_alpha: float = 16.0
+    seed: int = 7
+
+
+def _is_q(x) -> bool:
+    return isinstance(x, QLinear)
+
+
+def init_lora(params: Tree, pcfg: PreprocessConfig,
+              min_dim: int = 64) -> Dict[str, Tree]:
+    """{path: {a: (..., r, N), b: (..., K, r)}} for quantizable leaves."""
+    key = jax.random.PRNGKey(pcfg.seed)
+    lora: Dict[str, Tree] = {}
+
+    def visit(path, w):
+        nonlocal key
+        key, sub = jax.random.split(key)
+        lead = w.shape[:-2]
+        k, n = w.shape[-2:]
+        r = min(pcfg.rank, k // 2, n // 2)
+        a = 0.01 * jax.random.normal(sub, lead + (r, n), jnp.float32)
+        b = jnp.zeros(lead + (k, r), jnp.float32)
+        lora[jax.tree_util.keystr(path)] = {"a": a, "b": b}
+        return w
+
+    map_quantizable(params, visit, min_dim=min_dim)
+    return lora
+
+
+def merge_lora(base: Tree, lora: Dict[str, Tree], scale: float,
+               min_dim: int = 64, dense_from=None) -> Tree:
+    """base leaf (or its fake-quant dense) + scale·B@A per quantizable path."""
+    def visit(path, w):
+        key = jax.tree_util.keystr(path)
+        if key not in lora:
+            return w
+        ab = lora[key]
+        delta = scale * jnp.einsum("...kr,...rn->...kn", ab["b"], ab["a"])
+        wd = dense_from(key, w) if dense_from is not None else w
+        return (wd.astype(jnp.float32) + delta).astype(w.dtype)
+    return map_quantizable(base, visit, min_dim=min_dim)
+
+
+def restorative_lora(cfg: ArchConfig, par: Parallel, params: Tree,
+                     batches: List[Dict[str, jax.Array]],
+                     qcfg: QuantConfig,
+                     pcfg: PreprocessConfig = PreprocessConfig(),
+                     min_dim: int = 64,
+                     log: Optional[Callable[[str], None]] = None) -> Tree:
+    """Return the *preprocessed full-precision* checkpoint W' = W + BA."""
+    _log = log or (lambda s: None)
+    # 1) initial quantized model, frozen as fake-quant dense tensors
+    q0 = quantize_params_data_free(
+        params, dataclasses.replace(qcfg, learn_scales=False), min_dim=min_dim)
+    q0_dense = jax.tree.map(
+        lambda leaf: leaf.to_dense() if _is_q(leaf) else leaf, q0,
+        is_leaf=_is_q)
+
+    lora = init_lora(params, pcfg, min_dim=min_dim)
+    if not lora:
+        return params
+    scale = pcfg.lora_alpha / pcfg.rank
+    opt = AdamW(lr=pcfg.lr, weight_decay=0.0)
+    opt_state = opt.init(lora)
+
+    def loss_fn(lora, batch):
+        eff = merge_lora(q0_dense, lora, scale, min_dim=min_dim)
+        return M.forward_loss(cfg, par, eff, batch)
+
+    @jax.jit
+    def step(lora, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(lora, batch)
+        lora, opt_state = opt.update(grads, opt_state, lora)
+        return lora, opt_state, loss
+
+    n = len(batches)
+    for i in range(pcfg.steps):
+        lora, opt_state, loss = step(lora, opt_state, batches[i % n])
+        if i % max(1, pcfg.steps // 10) == 0:
+            _log(f"restorative-lora step {i}: loss {float(loss):.4f}")
+
+    # 3) merge the restorative compensation into the FP weights
+    return merge_lora(params, lora, scale, min_dim=min_dim)

@@ -1,0 +1,61 @@
+"""Structured 1-D salient-channel mask (paper §3.2).
+
+The layer quantization error `E = |X (W_qᵀ − Wᵀ)|` obeys (Eq. 4)
+
+    E ≤ Σᵢ |xᵢ| · Σⱼ |w_{i,j}^q − w_{i,j}|
+
+so the *input-activation channel magnitude* |xᵢ| controls the upper bound.
+We therefore rank input channels by calibration statistics s_i = E[|x_i|]
+and keep the top ρ (= 20%) of K at 4-bit; the rest binarize.
+
+The mask is one bit per *input channel* (K bits total, ≈0.0002 bits per
+weight for a 4096×4096 layer — Appendix A).  We additionally derive the
+salient-first channel permutation from the mask (stable order), which is
+storage-free, so the packed layout is contiguous: `[0:k_s) int4 |
+[k_s:K) binary` (TPU adaptation, DESIGN.md §3).
+
+A Hessian-diagonal proxy ranking (OWQ/BiLLM-style, `hessian=True`) is
+included for the Appendix-B comparison benchmarks.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def activation_saliency(x_absmean: jax.Array) -> jax.Array:
+    """Identity hook — saliency *is* the channel-wise E[|x|] statistic."""
+    return x_absmean
+
+
+def hessian_saliency(x_sqmean: jax.Array, w: jax.Array) -> jax.Array:
+    """OWQ-style proxy: diag(H) = 2 E[x²]; rank by sensitivity
+    s_i = diag(H)_i * ||w_i||² (per input channel i of w (K,N))."""
+    return 2.0 * x_sqmean * jnp.sum(jnp.square(w.astype(jnp.float32)), axis=-1)
+
+
+def round_salient(k: int, ratio: float, multiple: int) -> int:
+    """Salient channel count: ratio·K rounded to a pack/shard-friendly
+    multiple, clamped to [multiple, K - multiple]."""
+    k_s = int(round(ratio * k / multiple)) * multiple
+    k_s = max(multiple, min(k_s, k - multiple))
+    return k_s
+
+
+def structured_mask(saliency: jax.Array, ratio: float,
+                    multiple: int) -> Tuple[jax.Array, jax.Array, int]:
+    """Rank channels, return (mask bool (K,), perm (K,) salient-first, k_s).
+
+    `perm` is the stable salient-first ordering: salient channels in their
+    original relative order, then non-salient — fully derivable from the
+    1-bit mask, so it costs no extra storage.
+    """
+    k = saliency.shape[-1]
+    k_s = round_salient(k, ratio, multiple)
+    # top-k_s channels by saliency
+    _, top_idx = jax.lax.top_k(saliency, k_s)
+    mask = jnp.zeros((k,), bool).at[top_idx].set(True)
+    order = jnp.argsort(~mask, stable=True)  # salient (False<True) first
+    return mask, order.astype(jnp.int32), k_s

@@ -1,0 +1,57 @@
+"""Selection of quantizable weight leaves.
+
+PTQ1.61 (like PB-LLM/BiLLM) quantizes the *linear projection matrices* of
+every block; embeddings, lm_head, norms, biases, MoE routers, recurrence
+gate vectors and conv kernels stay fp16 (DESIGN.md §4) and are counted by
+the bit-accounting report.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Tuple
+
+import jax
+
+Tree = Any
+
+# final-key names of quantizable linears across all block kinds
+QUANT_NAMES = frozenset({
+    "wq", "wk", "wv", "wo",          # attention (incl. cross)
+    "wg", "wu", "wd",                # MLP and MoE experts
+    "w_x", "w_gate", "w_out",        # RG-LRU projections
+    "w_q", "w_k", "w_v",             # mLSTM projections
+    "w_gates", "w_up", "w_down",     # sLSTM projections
+})
+
+
+def _leaf_name(path) -> str:
+    last = path[-1]
+    return getattr(last, "key", getattr(last, "name", str(last)))
+
+
+def is_quantizable(path, leaf, min_dim: int) -> bool:
+    if not hasattr(leaf, "shape") or len(leaf.shape) < 2:
+        return False
+    if _leaf_name(path) not in QUANT_NAMES:
+        return False
+    k, n = leaf.shape[-2], leaf.shape[-1]
+    return k >= min_dim and n >= 16
+
+
+def map_quantizable(tree: Tree, fn: Callable[[Tuple, Any], Any],
+                    min_dim: int = 64, is_leaf=None) -> Tree:
+    """Replace each quantizable leaf by fn(path, leaf); others unchanged."""
+    def visit(path, leaf):
+        if is_quantizable(path, leaf, min_dim):
+            return fn(path, leaf)
+        return leaf
+    return jax.tree_util.tree_map_with_path(visit, tree, is_leaf=is_leaf)
+
+
+def quantizable_paths(tree: Tree, min_dim: int = 64) -> List[str]:
+    out = []
+    def visit(path, leaf):
+        if is_quantizable(path, leaf, min_dim):
+            out.append(jax.tree_util.keystr(path))
+        return leaf
+    jax.tree_util.tree_map_with_path(visit, tree)
+    return out

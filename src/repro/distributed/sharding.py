@@ -1,0 +1,105 @@
+"""Logical-axis → PartitionSpec translation (DESIGN.md §5).
+
+One rule table turns every parameter/cache/optimizer-state tree into a
+PartitionSpec tree for any mesh:
+
+  vocab/heads/kv_heads/ffn/rnn → "model"            (tensor parallel)
+  experts                      → "model" (EP) or fall through to ffn-TP
+  embed                        → ("pod","data") under FSDP else replicated
+  batch                        → ("pod","data")     (data parallel)
+  layers / None                → replicated (scan dim / small vectors)
+
+Conflicts (same mesh axis appearing twice in one spec — e.g. expert-
+sharded (experts, embed, ffn) weights under EP+TP) resolve first-come:
+later dims degrade to replicated, matching Megatron/MaxText practice.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as PS
+
+from repro.core.qlinear import QLinear, field_axes
+from repro.models.param import P, is_leaf as is_p
+
+Tree = Any
+
+
+@dataclass(frozen=True)
+class Rules:
+    """Sharding rule table; build per run from mesh + parallel config."""
+
+    tp_axis: str = "model"
+    dp_axes: Tuple[str, ...] = ("data",)      # ("pod","data") multi-pod
+    fsdp: bool = False
+    ep: bool = False                          # shard MoE expert dim
+
+    def axis_map(self) -> Dict[Optional[str], Any]:
+        m: Dict[Optional[str], Any] = {
+            "vocab": self.tp_axis,
+            "heads": self.tp_axis,
+            "kv_heads": self.tp_axis,
+            "ctx": self.tp_axis,      # context-sharded KV cache windows
+            "ffn": self.tp_axis,
+            "rnn": self.tp_axis,
+            "experts": self.tp_axis if self.ep else None,
+            "embed": self.dp_axes if self.fsdp else None,
+            "batch": self.dp_axes,
+            "layers": None,
+            None: None,
+        }
+        return m
+
+    def spec(self, axes: Tuple[Optional[str], ...]) -> PS:
+        amap = self.axis_map()
+        used = set()
+        out = []
+        for a in axes:
+            mesh_ax = amap.get(a, None)
+            flat = (mesh_ax,) if isinstance(mesh_ax, str) else tuple(mesh_ax or ())
+            if any(f in used for f in flat) or not flat:
+                out.append(None)
+            else:
+                used.update(flat)
+                out.append(mesh_ax if isinstance(mesh_ax, str) else tuple(flat))
+        return PS(*out)
+
+
+def rules_for_mesh(mesh, *, fsdp: bool = False, ep: bool = False) -> Rules:
+    names = mesh.axis_names
+    dp = ("pod", "data") if "pod" in names else ("data",)
+    return Rules(tp_axis="model", dp_axes=dp, fsdp=fsdp, ep=ep)
+
+
+def specs_for_tree(declared: Tree, rules: Rules) -> Tree:
+    """P declaration tree -> PartitionSpec tree (same structure).
+
+    Quantized (QLinear) declarations are handled by
+    ``repro.launch.qdeclare.declare_quantized``, which emits the spec tree
+    in the same pass that builds the abstract QLinears.
+    """
+    def visit(leaf):
+        if is_p(leaf):
+            return rules.spec(leaf.axes)
+        raise TypeError(f"specs_for_tree expects P leaves, got {type(leaf)}")
+    return jax.tree.map(visit, declared, is_leaf=is_p)
+
+
+def qlinear_specs(p_axes: Tuple, k_s: int, k: int, n: int, rules: Rules,
+                  use_kernel: bool = False) -> QLinear:
+    """PartitionSpec-QLinear for a weight declared with axes `p_axes`
+    (prefix…, in_axis, out_axis)."""
+    prefix, in_ax, out_ax = p_axes[:-2], p_axes[-2], p_axes[-1]
+    fa = field_axes(prefix, in_ax, out_ax)
+    return QLinear(**{key: rules.spec(v) for key, v in fa.items()},
+                   k_s=k_s, k=k, n=n, use_kernel=use_kernel)
+
+
+def named_shardings(mesh, spec_tree: Tree) -> Tree:
+    return jax.tree.map(
+        lambda s: jax.sharding.NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, PS))

@@ -1,0 +1,105 @@
+"""Pallas TPU kernel: the fused PTQ1.61 linear.
+
+One pallas_call computes  y = x_s @ W4deq + ((x_b·α_r2) @ sign)·(α_s·α_r1)
+over a salient-first-permuted input x (the structured mask as a contiguous
+channel split — DESIGN.md §3).  The K grid covers k_s/bk int4 steps then
+k_b/bk binary steps; `pl.when` selects the unpack path, so each step
+streams only its own packed bytes (no second kernel launch, no (M,N)
+re-read between the two halves — that is the fusion win over calling
+int4_matmul + binary_matmul).
+
+Requires k_s % bk == 0 and k_b % bk == 0 (QuantConfig.multiple guarantees
+it at production shapes; ops.mixed_matmul falls back to the XLA path
+otherwise).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.binary_matmul import _unpack_bits_block
+from repro.kernels.int4_matmul import _unpack_nibbles_block
+
+
+def _kernel(x_ref, w4_ref, s_ref, z_ref, bits_ref, a_in_ref, a_out_ref,
+            o_ref, *, bk, bn, k4_steps):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    @pl.when(k < k4_steps)
+    def _int4():
+        q = _unpack_nibbles_block(w4_ref[...], bk, bn)
+        w = (q - z_ref[...][:, None]) * s_ref[...][:, None]
+        o_ref[...] += jax.lax.dot(x_ref[...].astype(jnp.bfloat16),
+                                  w.astype(jnp.bfloat16),
+                                  preferred_element_type=jnp.float32)
+
+    @pl.when(k >= k4_steps)
+    def _binary():
+        x = x_ref[...].astype(jnp.float32) * a_in_ref[...][None, :]
+        sign = _unpack_bits_block(bits_ref[...], bk, bn)
+        acc = jax.lax.dot(x.astype(jnp.bfloat16), sign,
+                          preferred_element_type=jnp.float32)
+        o_ref[...] += acc * a_out_ref[...][None, :]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bn", "bk", "interpret"))
+def mixed_matmul(x: jax.Array, w4: jax.Array, s4: jax.Array, z4: jax.Array,
+                 bits: jax.Array, alpha_out: jax.Array, alpha_in: jax.Array,
+                 *, bm: int = 256, bn: int = 512, bk: int = 128,
+                 interpret: bool = True) -> jax.Array:
+    """x (M,K) permuted salient-first; returns (M,N) in x.dtype."""
+    m, kdim = x.shape
+    n = bits.shape[1]
+    k_s = w4.shape[0] * 2
+    k_b = bits.shape[0] * 8
+    assert k_s + k_b == kdim, (k_s, k_b, kdim)
+    bm, bn = min(bm, m), min(bn, n)
+    bk = min(bk, k_s if k_s else bk, k_b if k_b else bk)
+    assert (m % bm == 0 and n % bn == 0 and k_s % bk == 0 and k_b % bk == 0
+            and bk % 8 == 0), (m, n, k_s, k_b, bk)
+    k4_steps = k_s // bk
+    kb_steps = k_b // bk
+    grid = (m // bm, n // bn, k4_steps + kb_steps)
+
+    # index maps: clamp into each operand's own K range
+    def x_map(i, j, k):
+        return (i, k)
+
+    def w4_map(i, j, k):
+        return (jnp.minimum(k, max(k4_steps - 1, 0)), j)
+
+    def sz_map(i, j, k):
+        return (jnp.minimum(k, max(k4_steps - 1, 0)),)
+
+    def bits_map(i, j, k):
+        return (jnp.clip(k - k4_steps, 0, max(kb_steps - 1, 0)), j)
+
+    def ain_map(i, j, k):
+        return (jnp.clip(k - k4_steps, 0, max(kb_steps - 1, 0)),)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, bk=bk, bn=bn, k4_steps=k4_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), x_map),
+            pl.BlockSpec((bk // 2, bn), w4_map),
+            pl.BlockSpec((bk,), sz_map),
+            pl.BlockSpec((bk,), sz_map),
+            pl.BlockSpec((bk // 8, bn), bits_map),
+            pl.BlockSpec((bk,), ain_map),
+            pl.BlockSpec((bn,), lambda i, j, k: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, w4, s4.astype(jnp.float32), z4.astype(jnp.float32), bits,
+      alpha_in.astype(jnp.float32), alpha_out.astype(jnp.float32))
+    return out.astype(x.dtype)

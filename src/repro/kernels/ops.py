@@ -1,0 +1,43 @@
+"""Jit'd public wrappers dispatching QLinear forwards to Pallas kernels.
+
+On CPU (this container) kernels run with ``interpret=True`` for
+correctness; on TPU set ``repro.kernels.ops.INTERPRET = False`` (the
+launcher does this when ``jax.default_backend() == 'tpu'``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.binary_matmul import binary_matmul
+from repro.kernels.int4_matmul import int4_matmul
+from repro.kernels.mixed_matmul import mixed_matmul as _mixed
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+def _block_ok(k_s: int, k_b: int, n: int, bk: int = 128) -> bool:
+    return (k_s % bk == 0) and (k_b % bk == 0) and (n % 128 == 0)
+
+
+def mixed_matmul(x: jax.Array, q) -> jax.Array:
+    """PTQ1.61 linear forward for a QLinear `q` (2-D weights).
+
+    Flattens batch dims, permutes channels salient-first, runs the fused
+    kernel; falls back to the XLA dequant path for unaligned shapes.
+    """
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    xp = jnp.take(x.reshape(-1, k), q.perm, axis=-1)
+    if not _block_ok(q.k_s, q.k_b, q.n):
+        import dataclasses
+        from repro.core.qlinear import QLinear
+        return dataclasses.replace(q, use_kernel=False).__matmul_x__(x)
+    alpha_out = (q.alpha_s * q.alpha_r1).astype(jnp.float32)
+    y = _mixed(xp.astype(jnp.bfloat16), q.w4, q.s4, q.z4, q.bits,
+               alpha_out, q.alpha_r2.astype(jnp.float32),
+               interpret=INTERPRET)
+    return y.reshape(lead + (q.n,)).astype(x.dtype)
+
+
+__all__ = ["binary_matmul", "int4_matmul", "mixed_matmul", "INTERPRET"]

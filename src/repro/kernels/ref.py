@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth).
+
+Semantics contract (shared with the kernels):
+  * packed layouts are those of ``repro.core.pack`` (8 signs / 2 nibbles
+    per byte along K, N contiguous);
+  * binary  : y = ((x · α_r2) @ sign) · (α_s · α_r1)         [Eq. 9]
+  * int4    : y = x @ ((q − z)·s)          (per-input-channel s, z)
+  * mixed   : y = int4(x[:, :k_s]) + binary(x[:, k_s:])      [PTQ1.61 linear]
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pack
+
+
+def binary_matmul_ref(x: jax.Array, bits: jax.Array, alpha_out: jax.Array,
+                      alpha_in: jax.Array) -> jax.Array:
+    """x (M,K) f32/bf16; bits (K//8,N) u8; alpha_out (N,); alpha_in (K,)."""
+    sign = pack.unpack_bits(bits, axis=-2, dtype=jnp.float32)
+    y = (x.astype(jnp.float32) * alpha_in[None, :]) @ sign
+    return (y * alpha_out[None, :]).astype(x.dtype)
+
+
+def int4_matmul_ref(x: jax.Array, w4: jax.Array, s4: jax.Array,
+                    z4: jax.Array) -> jax.Array:
+    """x (M,K); w4 (K//2,N) u8 nibbles; s4,z4 (K,) per input channel."""
+    q = pack.unpack_nibbles(w4, axis=-2, dtype=jnp.float32)
+    w = (q - z4[:, None]) * s4[:, None]
+    return (x.astype(jnp.float32) @ w).astype(x.dtype)
+
+
+def mixed_matmul_ref(x: jax.Array, w4: jax.Array, s4: jax.Array,
+                     z4: jax.Array, bits: jax.Array, alpha_out: jax.Array,
+                     alpha_in: jax.Array) -> jax.Array:
+    """x (M,K) ALREADY salient-first permuted; k_s = 2*w4.shape[0]."""
+    k_s = w4.shape[-2] * 2
+    y4 = int4_matmul_ref(x[:, :k_s], w4, s4, z4)
+    yb = binary_matmul_ref(x[:, k_s:], bits, alpha_out, alpha_in)
+    return y4 + yb

@@ -1,0 +1,296 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks the device count on first
+#   init).  This module is the ONLY place the 512 fake devices exist;
+#   smoke tests and benchmarks see the real single CPU device.
+
+"""Multi-pod dry-run (deliverable e) + roofline-term extraction (g).
+
+For every (architecture × input-shape) cell and mesh:
+
+    with mesh:
+        jax.jit(step, in_shardings=…, out_shardings=…) \
+            .lower(**abstract inputs).compile()
+
+must succeed; we record ``memory_analysis()`` / ``cost_analysis()`` and
+the collective traffic parsed from the optimized HLO
+(launch/hlo_analysis.py) as JSON under results/dryrun/.
+
+Step kinds per cell (configs/base.SHAPE_CELLS):
+    train_4k     -> full train_step (fwd+bwd+AdamW, grad-accum scan)
+    prefill_32k  -> prefill (full-seq forward + cache build), PTQ1.61 weights
+    decode_32k   -> decode_step (1 token against ring caches), PTQ1.61 weights
+    long_500k    -> decode_step at 500k context (sub-quadratic archs only)
+
+Serving cells default to quantized (packed QLinear) weights — the paper's
+system-level payoff; ``--serve-fp`` lowers the bf16 variant instead so
+§Perf can report the before/after weight-traffic delta.
+
+Usage:
+    python -m repro.launch.dryrun --all                 # every live cell, 16x16
+    python -m repro.launch.dryrun --all --mesh multipod # 2x16x16
+    python -m repro.launch.dryrun --arch qwen3-4b --cell train_4k
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.configs.base import (ArchConfig, SHAPE_CELLS, ShapeCell,
+                                cell_applicable, cell_by_name)
+from repro.core.qlinear import QuantConfig
+from repro.distributed.compression import CompressionConfig
+from repro.distributed.sharding import named_shardings, specs_for_tree
+from repro.launch import hlo_analysis as H
+from repro.launch.inputs import decode_inputs, prefill_inputs, train_inputs
+from repro.launch.mesh import make_production_mesh
+from repro.launch.presets import Preset, make_preset
+from repro.launch.qdeclare import declare_quantized
+from repro.launch.train import make_train_step, state_specs
+from repro.models import model as M
+from repro.models.param import abstractify
+from repro.optim.adamw import AdamW, AdamWState
+
+Tree = Any
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+# ---------------------------------------------------------------------------
+# Abstract state builders
+# ---------------------------------------------------------------------------
+def abstract_train_state(cfg: ArchConfig, par) -> Tree:
+    p_abs = abstractify(M.declare_params(cfg, par))
+    f32 = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32)
+    return {
+        "params": p_abs,
+        "opt": AdamWState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                          mu=jax.tree.map(f32, p_abs),
+                          nu=jax.tree.map(f32, p_abs)),
+        "residual": jax.ShapeDtypeStruct((), jnp.float32),
+    }
+
+
+def serving_params(cfg: ArchConfig, par, rules, quantized: bool,
+                   qcfg: QuantConfig) -> Tuple[Tree, Tree]:
+    """(abstract params, PartitionSpec tree) for prefill/decode cells."""
+    if quantized:
+        return declare_quantized(cfg, par, qcfg, rules)
+    decl = M.declare_params(cfg, par)
+    return abstractify(decl), specs_for_tree(decl, rules)
+
+
+# ---------------------------------------------------------------------------
+# Lower + compile one cell
+# ---------------------------------------------------------------------------
+def lower_cell(cfg: ArchConfig, cell: ShapeCell, mesh, preset: Preset,
+               *, quantized_serving: bool = True,
+               qcfg: QuantConfig = QuantConfig()):
+    par, rules = preset.par, preset.rules
+    opt = AdamW(lr=1e-4)
+
+    with mesh:
+        if cell.kind == "train":
+            sspec = state_specs(cfg, par, rules, CompressionConfig())
+            step = make_train_step(cfg, par, opt, CompressionConfig(),
+                                   param_spec=sspec["params"])
+            state_abs = abstract_train_state(cfg, par)
+            inp, ispec = train_inputs(cfg, cell, par, rules)
+            fn = jax.jit(step,
+                         in_shardings=(named_shardings(mesh, sspec),
+                                       named_shardings(mesh, ispec)),
+                         donate_argnums=(0,))
+            return fn.lower(state_abs, inp)
+
+        p_abs, pspec = serving_params(cfg, par, rules, quantized_serving,
+                                      qcfg)
+        if cell.kind == "prefill":
+            inp, ispec = prefill_inputs(cfg, cell, par, rules)
+
+            def prefill_step(params, batch):
+                return M.prefill(cfg, par, params, batch, cell.seq_len)
+
+            fn = jax.jit(prefill_step,
+                         in_shardings=(named_shardings(mesh, pspec),
+                                       named_shardings(mesh, ispec)))
+            return fn.lower(p_abs, inp)
+
+        # decode
+        (tok, pos, caches), (tspec, pspec2, cspec) = decode_inputs(
+            cfg, cell, par, rules)
+
+        def serve_step(params, token, position, caches):
+            return M.decode_step(cfg, par, params, token, position, caches,
+                                 cell.seq_len)
+
+        fn = jax.jit(serve_step,
+                     in_shardings=(named_shardings(mesh, pspec),
+                                   named_shardings(mesh, tspec),
+                                   named_shardings(mesh, pspec2),
+                                   named_shardings(mesh, cspec)),
+                     donate_argnums=(3,))
+        return fn.lower(p_abs, tok, pos, caches)
+
+
+def analyze(compiled, mesh, cfg: ArchConfig, cell: ShapeCell) -> Dict:
+    ca = compiled.cost_analysis()
+    ma = compiled.memory_analysis()
+    # trip-count-aware static analysis (XLA's cost_analysis counts scan
+    # bodies once — see hlo_analysis.py docstring)
+    mod = H.module_analysis(compiled.as_text())
+    coll = mod["collectives"]
+    flops = float(mod["flops"])
+    bytes_accessed = float(mod["hbm_bytes"])
+    roof = H.roofline_terms(flops, bytes_accessed, coll["wire_bytes"])
+
+    # useful-FLOPs model: 6·N_active·D for train, 2·N_active·D for fwd-only
+    n_active = cfg.active_params()
+    tokens = cell.global_batch * (cell.seq_len if cell.kind != "decode"
+                                  else 1)
+    mult = 6 if cell.kind == "train" else 2
+    model_flops = mult * n_active * tokens
+    devices = int(mesh.devices.size)
+    model_flops_per_dev = model_flops / devices
+
+    top = H.top_contributors(compiled.as_text(), k=5)
+    slim = lambda rows: [{k: r[k] for k in
+                          ("name", "mult", "flops", "bytes", "coll_wire")}
+                         for r in rows]
+    return {
+        "flops_per_device": flops,
+        "bytes_accessed_per_device": bytes_accessed,
+        "top": {k: slim(v) for k, v in top.items()},
+        "xla_flops_raw": float(ca.get("flops", 0.0)),
+        "xla_bytes_raw": float(ca.get("bytes accessed", 0.0)),
+        "transcendentals": float(ca.get("transcendentals", 0.0)),
+        "collectives": coll,
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+        },
+        "roofline": roof,
+        "model_flops": model_flops,
+        "model_flops_per_device": model_flops_per_dev,
+        "useful_flops_ratio": (model_flops_per_dev / flops) if flops else 0.0,
+        "devices": devices,
+    }
+
+
+def run_cell(arch: str, cell_name: str, mesh_kind: str, *,
+             quantized_serving: bool = True, out_dir: str = RESULTS_DIR,
+             force: bool = False, tag: str = "") -> Dict:
+    cfg = registry.get(arch)
+    cell = cell_by_name(cell_name)
+    ok, why = cell_applicable(cfg, cell)
+    base = f"{arch}__{cell_name}{('__' + tag) if tag else ''}"
+    mesh_dir = os.path.join(out_dir, mesh_kind)
+    os.makedirs(mesh_dir, exist_ok=True)
+    path = os.path.join(mesh_dir, base + ".json")
+
+    if not ok:
+        rec = {"arch": arch, "cell": cell_name, "mesh": mesh_kind,
+               "status": "skipped", "reason": why}
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=2)
+        return rec
+
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") == "ok":
+            return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    preset = make_preset(cfg, cell, mesh)
+    t0 = time.time()
+    try:
+        lowered = lower_cell(cfg, cell, mesh, preset,
+                             quantized_serving=quantized_serving)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+        rec = {
+            "arch": arch, "cell": cell_name, "mesh": mesh_kind,
+            "status": "ok",
+            "quantized_serving": bool(quantized_serving
+                                      and cell.kind != "train"),
+            "preset": {
+                "tp": preset.par.tp, "dp": preset.par.dp,
+                "fsdp": preset.par.fsdp, "sp": preset.par.sp,
+                "microbatches": preset.par.microbatches,
+                "remat": preset.par.remat,
+                "shard_batch": preset.par.shard_batch,
+                "ep": preset.rules.ep,
+            },
+            "lower_s": t_lower, "compile_s": t_compile,
+            **analyze(compiled, mesh, cfg, cell),
+        }
+    except Exception as e:  # a failing cell is a bug — record it loudly
+        rec = {"arch": arch, "cell": cell_name, "mesh": mesh_kind,
+               "status": "error", "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-4000:]}
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=2)
+    return rec
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser(description="multi-pod dry-run")
+    p.add_argument("--arch", default=None)
+    p.add_argument("--cell", default=None)
+    p.add_argument("--mesh", default="pod", choices=["pod", "multipod"])
+    p.add_argument("--all", action="store_true",
+                   help="all assigned archs × all applicable cells")
+    p.add_argument("--serve-fp", action="store_true",
+                   help="bf16 weights for serving cells (baseline variant)")
+    p.add_argument("--tag", default="",
+                   help="suffix for the result filename (perf variants)")
+    p.add_argument("--force", action="store_true")
+    p.add_argument("--out", default=RESULTS_DIR)
+    args = p.parse_args(argv)
+
+    if args.all:
+        archs = registry.ASSIGNED
+        cells = [c.name for c in SHAPE_CELLS]
+    else:
+        archs = [args.arch or "qwen3-4b"]
+        cells = [args.cell or "train_4k"]
+
+    n_ok = n_skip = n_err = 0
+    for arch in archs:
+        for cell in cells:
+            t0 = time.time()
+            rec = run_cell(arch, cell, args.mesh,
+                           quantized_serving=not args.serve_fp,
+                           out_dir=args.out, force=args.force,
+                           tag=args.tag)
+            dt = time.time() - t0
+            st = rec["status"]
+            n_ok += st == "ok"
+            n_skip += st == "skipped"
+            n_err += st == "error"
+            extra = ""
+            if st == "ok":
+                r = rec["roofline"]
+                extra = (f"dominant={r['dominant']} "
+                         f"bound={r['step_time_lower_bound_s']*1e3:.2f}ms "
+                         f"compute_frac={r['compute_fraction']:.3f}")
+            elif st == "error":
+                extra = rec["error"][:120]
+            print(f"[{st:7s}] {arch:22s} {cell:12s} mesh={args.mesh:8s} "
+                  f"({dt:5.1f}s) {extra}", flush=True)
+    print(f"\nok={n_ok} skipped={n_skip} error={n_err}")
+    return 0 if n_err == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,84 @@
+"""ShapeDtypeStruct input stand-ins + PartitionSpecs per dry-run cell.
+
+`input_specs(cfg, cell, par, rules)` returns (abstract inputs,
+PartitionSpec tree) for the step kind of the cell:
+  train   : {tokens (B,S), targets (B,S) [, vision_embeds / frames]}
+  prefill : {tokens (B,S) [, extras]}
+  decode  : (token (B,), pos (B,), caches)  — caches sized by the cell
+            (ring windows bound SWA/local archs; recurrent state is O(1)).
+
+Frontend stubs: llava's vision tower contributes 576 precomputed patch
+embeddings inside the sequence budget; seamless's speech encoder sees
+ENC_FRAMES precomputed frame embeddings (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as PS
+
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.distributed.sharding import Rules
+from repro.models import model as M
+from repro.models.common import Parallel
+from repro.models.param import abstractify, axes_tree
+
+Tree = Any
+ENC_FRAMES = 1024       # seamless stub: fixed speech-frame budget
+SDS = jax.ShapeDtypeStruct
+
+
+def _bspec(rules: Rules, par: Parallel, *rest) -> PS:
+    if not par.shard_batch:
+        return PS(None, *rest)
+    dp = rules.dp_axes if len(rules.dp_axes) > 1 else rules.dp_axes[0]
+    return PS(dp, *rest)
+
+
+def train_inputs(cfg: ArchConfig, cell: ShapeCell, par: Parallel,
+                 rules: Rules) -> Tuple[Dict, Dict]:
+    b, s = cell.global_batch, cell.seq_len
+    inp = {"tokens": SDS((b, s), jnp.int32),
+           "targets": SDS((b, s), jnp.int32)}
+    spec = {"tokens": _bspec(rules, par, None),
+            "targets": _bspec(rules, par, None)}
+    if cfg.frontend == "vision":
+        inp["vision_embeds"] = SDS((b, cfg.frontend_tokens, cfg.d_model),
+                                   jnp.bfloat16)
+        spec["vision_embeds"] = _bspec(rules, par, None, None)
+    if cfg.enc_dec:
+        inp["frames"] = SDS((b, ENC_FRAMES, cfg.d_model), jnp.bfloat16)
+        spec["frames"] = _bspec(rules, par, None, None)
+    return inp, spec
+
+
+def prefill_inputs(cfg: ArchConfig, cell: ShapeCell, par: Parallel,
+                   rules: Rules) -> Tuple[Dict, Dict]:
+    inp, spec = train_inputs(cfg, cell, par, rules)
+    del inp["targets"], spec["targets"]
+    return inp, spec
+
+
+def decode_inputs(cfg: ArchConfig, cell: ShapeCell, par: Parallel,
+                  rules: Rules) -> Tuple[Tuple, Tuple]:
+    b = cell.global_batch
+    cache_decl = M.init_caches(cfg, par, b, cell.seq_len,
+                               enc_len=ENC_FRAMES if cfg.enc_dec else 0)
+    caches = abstractify(cache_decl)
+    cache_spec = jax.tree.map(lambda p: rules.spec(p.axes), cache_decl,
+                              is_leaf=lambda x: hasattr(x, "axes"))
+    if not par.shard_batch:
+        # strip the data axis from cache batch dims
+        def debatch(p, s):
+            parts = list(s) + [None] * (len(p.shape) - len(s))
+            fixed = [None if i == 1 else a for i, a in enumerate(parts)]
+            return PS(*fixed)
+        cache_spec = jax.tree.map(
+            debatch, cache_decl, cache_spec,
+            is_leaf=lambda x: hasattr(x, "axes"))
+    tok = SDS((b,), jnp.int32)
+    pos = SDS((b,), jnp.int32)
+    tspec = _bspec(rules, par)
+    return (tok, pos, caches), (tspec, tspec, cache_spec)

@@ -1,0 +1,58 @@
+"""Per-(arch × shape × mesh) parallelism presets.
+
+Chooses the Parallel knobs and sharding Rules for each dry-run cell:
+  * FSDP (ZeRO-3) for ≥8B-parameter archs (weights + opt state shard over
+    data as well as model);
+  * EP for granite (32 experts / 16-way model axis divides); Mixtral's 8
+    experts use expert-TP (ffn over model) instead;
+  * gradient-accumulation microbatches scale with d_model so per-chip
+    activation memory stays flat at train_4k;
+  * batch sharding disabled when global_batch < |dp| (long_500k b=1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Tuple
+
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.distributed.sharding import Rules, rules_for_mesh
+from repro.models.common import Parallel
+
+FSDP_PARAM_THRESHOLD = 8e9
+
+
+@dataclass(frozen=True)
+class Preset:
+    par: Parallel
+    rules: Rules
+    quantized_serving: bool = True    # serve cells with PTQ1.61 weights
+
+
+def n_params_cheap(cfg: ArchConfig) -> int:
+    # avoid building the tree at preset time: rough closed form is fine
+    from repro.models import model as M
+    return M.n_params(cfg)
+
+
+def make_preset(cfg: ArchConfig, cell: ShapeCell, mesh) -> Preset:
+    tp = mesh.shape["model"]
+    dp = int(mesh.devices.size) // tp
+    n = n_params_cheap(cfg)
+    fsdp = bool(cell.kind == "train" and n >= FSDP_PARAM_THRESHOLD)
+    ep = bool(cfg.moe and cfg.moe.n_experts % tp == 0)
+    shard_batch = cell.global_batch % dp == 0 and cell.global_batch >= dp
+    if cell.kind == "train":
+        micro = 8 if cfg.d_model >= 6144 else (4 if cfg.d_model >= 2048 else 2)
+        micro = min(micro, max(1, cell.global_batch // dp))
+    else:
+        micro = 1
+    par = Parallel(tp=tp, dp=dp, fsdp=fsdp, sp=True,
+                   microbatches=micro, remat=(cell.kind == "train"),
+                   attn_chunk=1024, shard_batch=shard_batch,
+                   # decode_unroll measured WORSE (8× bytes): XLA does not
+                   # elide the stacked-cache copies that unrolled in-place
+                   # updates need — see EXPERIMENTS.md §Perf (refuted)
+                   decode_unroll=False)
+    rules = dataclasses.replace(rules_for_mesh(mesh, fsdp=fsdp, ep=ep))
+    return Preset(par=par, rules=rules)

@@ -1,0 +1,67 @@
+"""Abstract quantized-parameter declaration for serving dry-runs.
+
+Walks the P-declared parameter tree; every quantizable leaf becomes a
+QLinear of ``jax.ShapeDtypeStruct`` (packed shapes per QuantConfig), with
+the matching PartitionSpec QLinear emitted in the same pass — no real
+weights, no device allocation, exactly what ``.lower()`` needs.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.qlinear import QLinear, QuantConfig
+from repro.core.saliency import round_salient
+from repro.core.select import is_quantizable
+from repro.distributed.sharding import Rules, qlinear_specs
+from repro.models import model as M
+from repro.models.common import Parallel
+from repro.models.param import P, is_leaf as is_p
+
+Tree = Any
+
+
+def declare_qlinear(p: P, qcfg: QuantConfig) -> QLinear:
+    """P((…,K,N)) -> abstract QLinear (ShapeDtypeStruct fields)."""
+    lead = p.shape[:-2]
+    k, n = p.shape[-2:]
+    k_s = round_salient(k, qcfg.ratio, qcfg.multiple)
+    k_b = k - k_s
+    sds = jax.ShapeDtypeStruct
+    return QLinear(
+        perm=sds(lead + (k,), jnp.int32),
+        w4=sds(lead + (k_s // 2, n), jnp.uint8),
+        s4=sds(lead + (k_s,), jnp.float32),
+        z4=sds(lead + (k_s,), jnp.float32),
+        bits=sds(lead + (k_b // 8, n), jnp.uint8),
+        alpha_s=sds(lead + (n,), jnp.float32),
+        alpha_r1=sds(lead + (n,), jnp.float32),
+        alpha_r2=sds(lead + (k_b,), jnp.float32),
+        k_s=k_s, k=k, n=n, use_kernel=qcfg.use_kernel)
+
+
+def declare_quantized(cfg: ArchConfig, par: Parallel, qcfg: QuantConfig,
+                      rules: Rules, min_dim: int = 256
+                      ) -> Tuple[Tree, Tree]:
+    """(abstract quantized params, PartitionSpec tree), same structure."""
+    declared = M.declare_params(cfg, par)
+
+    def visit(path, leaf):
+        if is_quantizable(path, leaf, min_dim):
+            q = declare_qlinear(leaf, qcfg)
+            spec = qlinear_specs(leaf.axes, q.k_s, q.k, q.n, rules,
+                                 use_kernel=qcfg.use_kernel)
+            return (q, spec)
+        return (jax.ShapeDtypeStruct(leaf.shape, leaf.dtype),
+                rules.spec(leaf.axes))
+
+    paired = jax.tree_util.tree_map_with_path(visit, declared, is_leaf=is_p)
+    is_pair = lambda x: isinstance(x, tuple) and len(x) == 2 and (
+        isinstance(x[0], (jax.ShapeDtypeStruct, QLinear)))
+    abstract = jax.tree.map(lambda t: t[0], paired, is_leaf=is_pair)
+    specs = jax.tree.map(lambda t: t[1], paired, is_leaf=is_pair)
+    return abstract, specs

@@ -1,0 +1,124 @@
+"""Serving launcher: quantize a model with PTQ1.61, run the continuous-
+batching engine over a stream of requests (deliverable b, serving flavor).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch tiny-lm --requests 8
+
+Weights are quantized data-free (fast path) or with the full calibrated
+pipeline (--calibrated).  ``--kernel`` dispatches the fused Pallas
+mixed_matmul (interpret mode on CPU) instead of the XLA dequant path.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.core.bits import model_bits
+from repro.core.pipeline import (quantize_model_ptq161,
+                                 quantize_params_data_free)
+from repro.core.qlinear import QuantConfig
+from repro.data.synthetic import CorpusConfig, SyntheticCorpus
+from repro.models import model as M
+from repro.models.common import Parallel
+from repro.runtime.engine import Engine
+
+Tree = Any
+
+
+def run(args):
+    cfg = registry.get(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    par = Parallel(remat=False, attn_chunk=args.attn_chunk)
+    params = M.init_params(cfg, par, jax.random.PRNGKey(args.seed))
+
+    qcfg = QuantConfig(ratio=args.ratio, multiple=args.multiple,
+                       steps=args.opt_steps, use_kernel=args.kernel)
+    corpus = SyntheticCorpus(CorpusConfig(vocab=cfg.vocab, seed=args.seed))
+
+    t0 = time.time()
+    if args.quantize == "none":
+        qparams = params
+    elif args.quantize == "calibrated":
+        calib = [{"tokens": jnp.asarray(t)} for t, _ in
+                 corpus.batches(1, args.calib_seq, args.calib_segments,
+                                split="calib")]
+        qparams = quantize_model_ptq161(cfg, par, params, calib, qcfg,
+                                        min_dim=args.min_dim)
+    else:  # data-free
+        qparams = quantize_params_data_free(params, qcfg,
+                                            min_dim=args.min_dim)
+    t_quant = time.time() - t0
+
+    if args.quantize != "none":
+        rep = model_bits(qparams)
+        print(f"[quant] {args.quantize} in {t_quant:.1f}s — "
+              f"{rep['avg_bits_per_quantized_weight']:.3f} bits/weight over "
+              f"{rep['quantized_weights']:,} weights")
+
+    engine = Engine(cfg, par, qparams, n_slots=args.slots,
+                    max_seq=args.max_seq,
+                    prefill_buckets=(args.max_seq // 8, args.max_seq // 2))
+
+    rng = np.random.default_rng(args.seed)
+    reqs = []
+    for i in range(args.requests):
+        plen = int(rng.integers(4, args.max_seq // 4))
+        prompt = corpus.document(10_000 + i, plen)
+        reqs.append(engine.submit(prompt, max_new=args.max_new,
+                                  temperature=args.temperature))
+
+    t0 = time.time()
+    engine.run()
+    dt = time.time() - t0
+    toks = sum(len(r.out_tokens) for r in reqs)
+    out = {
+        "requests": len(reqs),
+        "generated_tokens": toks,
+        "wall_s": dt,
+        "tokens_per_s": toks / max(dt, 1e-9),
+        "all_done": all(r.done for r in reqs),
+        "quantize_mode": args.quantize,
+        "quantize_s": t_quant,
+    }
+    print(json.dumps(out, indent=2))
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(out, f, indent=2)
+    return out
+
+
+def parse_args(argv=None):
+    p = argparse.ArgumentParser(description="repro serving launcher")
+    p.add_argument("--arch", default="tiny-lm")
+    p.add_argument("--reduced", action="store_true")
+    p.add_argument("--quantize", default="datafree",
+                   choices=["none", "datafree", "calibrated"])
+    p.add_argument("--kernel", action="store_true",
+                   help="use the fused Pallas mixed_matmul path")
+    p.add_argument("--ratio", type=float, default=0.2)
+    p.add_argument("--multiple", type=int, default=16)
+    p.add_argument("--min-dim", type=int, default=32)
+    p.add_argument("--opt-steps", type=int, default=3)
+    p.add_argument("--calib-segments", type=int, default=4)
+    p.add_argument("--calib-seq", type=int, default=64)
+    p.add_argument("--requests", type=int, default=8)
+    p.add_argument("--slots", type=int, default=4)
+    p.add_argument("--max-seq", type=int, default=128)
+    p.add_argument("--max-new", type=int, default=16)
+    p.add_argument("--temperature", type=float, default=0.0)
+    p.add_argument("--attn-chunk", type=int, default=1024)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--json-out", default=None)
+    return p.parse_args(argv)
+
+
+if __name__ == "__main__":
+    run(parse_args())

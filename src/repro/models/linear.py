@@ -1,0 +1,31 @@
+"""Single matmul entry point for the whole model zoo.
+
+``dense(x, w)`` accepts either a plain (K, N) array or any *quantized
+weight object* exposing ``__matmul_x__(x)`` (duck-typed; see
+``repro.core.qlinear.QLinear``).  This is the seam through which PTQ1.61
+(and every baseline quantizer) plugs into serving without touching model
+code.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def dense(x: jax.Array, w, bias: Optional[jax.Array] = None) -> jax.Array:
+    if hasattr(w, "__matmul_x__"):
+        y = w.__matmul_x__(x)
+    else:
+        y = jnp.einsum("...k,kn->...n", x, w.astype(x.dtype))
+    if bias is not None:
+        y = y + bias.astype(y.dtype)
+    return y
+
+
+def expert_dense(x: jax.Array, w) -> jax.Array:
+    """Per-expert batched matmul: x (E,C,K) @ w (E,K,N) -> (E,C,N)."""
+    if hasattr(w, "__expert_matmul__"):
+        return w.__expert_matmul__(x)
+    return jnp.einsum("eck,ekn->ecn", x, w.astype(x.dtype))

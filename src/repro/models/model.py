@@ -1,0 +1,209 @@
+"""Model facade: parameter declaration, loss, prefill and decode entry
+points for every architecture family (decoder-only LM, VLM/audio stubs,
+encoder–decoder).
+
+All public functions are pure and jit/pjit-friendly; the launchers wrap
+them with shardings.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models.common import Parallel, hint_act
+from repro.models.linear import dense
+from repro.models.param import P, abstractify, count_params, materialize
+
+Tree = Any
+
+XENT_CHUNK = 512
+
+
+# ---------------------------------------------------------------------------
+# Parameter declaration
+# ---------------------------------------------------------------------------
+def declare_params(cfg: ArchConfig, par: Parallel) -> Tree:
+    d, v = cfg.d_model, cfg.vocab_padded
+    p: Dict[str, Tree] = {
+        "embed": P((v, d), ("vocab", "embed"), "normal"),
+        "stages": [T.init_stage(cfg, par, s, cross=cfg.enc_dec)
+                   for s in cfg.stages],
+        "final_norm": L.init_norm(cfg),
+    }
+    if not cfg.tied_embeddings:
+        p["lm_head"] = P((d, v), ("embed", "vocab"), "scaled")
+    if cfg.enc_dec:
+        from repro.configs.base import Stage
+        enc_stage = Stage(("dense",), cfg.n_enc_layers)
+        p["enc"] = {
+            "stages": [T.init_stage(cfg, par, enc_stage)],
+            "final_norm": L.init_norm(cfg),
+        }
+    return p
+
+
+def init_params(cfg: ArchConfig, par: Parallel, key) -> Tree:
+    return materialize(declare_params(cfg, par), key)
+
+
+def abstract_params(cfg: ArchConfig, par: Parallel) -> Tree:
+    return abstractify(declare_params(cfg, par))
+
+
+def n_params(cfg: ArchConfig, par: Optional[Parallel] = None) -> int:
+    return count_params(declare_params(cfg, par or Parallel()))
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+def embed_tokens(cfg: ArchConfig, params: Tree, tokens: jax.Array) -> jax.Array:
+    e = params["embed"]
+    if hasattr(e, "__gather_rows__"):
+        return e.__gather_rows__(tokens)
+    return jnp.take(e, tokens, axis=0)
+
+
+def _head_weight(cfg: ArchConfig, params: Tree):
+    if cfg.tied_embeddings:
+        e = params["embed"]
+        return e.T if isinstance(e, jax.Array) else e.transpose()
+    return params["lm_head"]
+
+
+def _mask_pad(cfg: ArchConfig, logits: jax.Array) -> jax.Array:
+    if cfg.vocab_padded == cfg.vocab:
+        return logits
+    pad_mask = jnp.arange(cfg.vocab_padded) < cfg.vocab
+    return jnp.where(pad_mask, logits, jnp.finfo(jnp.float32).min)
+
+
+def logits_fn(cfg: ArchConfig, params: Tree, x: jax.Array) -> jax.Array:
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    return _mask_pad(cfg, dense(x, _head_weight(cfg, params)))
+
+
+def softmax_xent_chunked(cfg: ArchConfig, params: Tree, x: jax.Array,
+                         targets: jax.Array, chunk: int = XENT_CHUNK):
+    """Cross entropy without materializing (B,S,V) logits.
+
+    Scans seq chunks; each chunk's logits are recomputed in the backward
+    pass (jax.checkpoint) so peak memory stays at (B,chunk,V/shards).
+    targets < 0 are masked out.
+    """
+    b, s, d = x.shape
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    w = _head_weight(cfg, params)
+    chunk = min(chunk, s)
+    if s % chunk:
+        chunk = s  # fallback for odd smoke shapes
+    nc = s // chunk
+    xc = x.reshape(b, nc, chunk, d).swapaxes(0, 1)
+    tc = targets.reshape(b, nc, chunk).swapaxes(0, 1)
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def chunk_loss(carry, xs):
+        xx, tt = xs
+        logits = _mask_pad(cfg, dense(xx, w).astype(jnp.float32))
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(
+            logits, tt.clip(0)[..., None], axis=-1)[..., 0]
+        mask = (tt >= 0).astype(jnp.float32)
+        loss, cnt = carry
+        return (loss + jnp.sum((lse - picked) * mask), cnt + jnp.sum(mask)), None
+
+    (loss, cnt), _ = jax.lax.scan(chunk_loss, (jnp.zeros(()), jnp.zeros(())),
+                                  (xc, tc))
+    return loss / jnp.maximum(cnt, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+def _backbone_inputs(cfg: ArchConfig, params: Tree, batch: Dict[str, jax.Array]):
+    """Token embedding + frontend-stub splicing (vision prefix / audio enc)."""
+    tokens = batch["tokens"]
+    x = embed_tokens(cfg, params, tokens)
+    if cfg.frontend == "vision" and "vision_embeds" in batch:
+        ft = batch["vision_embeds"].shape[1]
+        x = jnp.concatenate([batch["vision_embeds"].astype(x.dtype),
+                             x[:, ft:]], axis=1)
+    bsz, s = tokens.shape
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (bsz, s))
+    return x, positions
+
+
+def encode(cfg: ArchConfig, par: Parallel, params: Tree,
+           frames: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Audio/enc-dec encoder over precomputed frame embeddings (stub
+    frontend): frames (B, S_enc, D) -> (enc_out, enc_positions)."""
+    from repro.configs.base import Stage
+    b, s, _ = frames.shape
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = hint_act(frames, par)
+    enc_stage = Stage(("dense",), cfg.n_enc_layers)
+    for sp in params["enc"]["stages"]:
+        x, _ = T.stage_full(cfg, par, enc_stage, sp, x, pos, causal=False)
+    return L.apply_norm(cfg, params["enc"]["final_norm"], x), pos
+
+
+def forward_loss(cfg: ArchConfig, par: Parallel, params: Tree,
+                 batch: Dict[str, jax.Array]) -> jax.Array:
+    """Causal-LM loss (plus MoE aux).  batch: tokens (B,S), targets (B,S),
+    optional vision_embeds (B,ft,D) / frames (B,S_enc,D)."""
+    x, positions = _backbone_inputs(cfg, params, batch)
+    x = hint_act(x, par)
+    enc_out = enc_pos = None
+    if cfg.enc_dec:
+        enc_out, enc_pos = encode(cfg, par, params, batch["frames"])
+    aux = jnp.zeros((), jnp.float32)
+    for stage, sp in zip(cfg.stages, params["stages"]):
+        x, a = T.stage_full(cfg, par, stage, sp, x, positions, causal=True,
+                            enc_out=enc_out, enc_pos=enc_pos, remat=par.remat)
+        aux = aux + a
+    loss = softmax_xent_chunked(cfg, params, x, batch["targets"])
+    return loss + 0.01 * aux
+
+
+def prefill(cfg: ArchConfig, par: Parallel, params: Tree,
+            batch: Dict[str, jax.Array], max_seq: int):
+    """Full-sequence prefill -> (last-token logits, caches)."""
+    x, positions = _backbone_inputs(cfg, params, batch)
+    x = hint_act(x, par)
+    enc_out = enc_pos = None
+    if cfg.enc_dec:
+        enc_out, enc_pos = encode(cfg, par, params, batch["frames"])
+    caches = []
+    for stage, sp in zip(cfg.stages, params["stages"]):
+        x, c = T.stage_prefill(cfg, par, stage, sp, x, positions, max_seq,
+                               enc_out=enc_out, enc_pos=enc_pos)
+        caches.append(c)
+    logits = logits_fn(cfg, params, x[:, -1:])
+    return logits, tuple(caches)
+
+
+def decode_step(cfg: ArchConfig, par: Parallel, params: Tree,
+                token: jax.Array, pos: jax.Array, caches: Tree, max_seq: int):
+    """One decode step. token (B,) int32; pos (B,) absolute positions."""
+    x = embed_tokens(cfg, params, token[:, None])
+    new_caches = []
+    for stage, sp, c in zip(cfg.stages, params["stages"], caches):
+        x, nc = T.stage_step(cfg, par, stage, sp, x, pos, c, max_seq)
+        new_caches.append(nc)
+    logits = logits_fn(cfg, params, x)
+    return logits[:, 0], tuple(new_caches)
+
+
+def init_caches(cfg: ArchConfig, par: Parallel, batch: int, max_seq: int,
+                enc_len: int = 0) -> Tree:
+    """Abstract decode-cache declaration (P tree) for all stages."""
+    return tuple(T.init_stage_cache(cfg, par, s, batch, max_seq, enc_len)
+                 for s in cfg.stages)

@@ -1,0 +1,104 @@
+"""Parameter trees with logical sharding axes.
+
+Model init functions build a tree of ``P`` leaves (shape + logical axis
+names + init style).  From that single declaration we derive:
+
+  * concrete parameter arrays (``materialize``),
+  * abstract ``jax.ShapeDtypeStruct`` stand-ins for the dry-run
+    (``abstractify``),
+  * ``jax.sharding.PartitionSpec`` trees via a logical→mesh rule table
+    (``repro.distributed.sharding``).
+
+Logical axis vocabulary (see DESIGN.md §5):
+  "embed"     model width (d_model)            → FSDP ("data") or replicated
+  "heads"     attention query heads × head_dim → TP ("model")
+  "kv_heads"  kv heads × head_dim              → TP ("model") (pre-replicated
+                                                 to TP degree by the model)
+  "ffn"       MLP hidden                       → TP ("model")
+  "vocab"     vocabulary                       → TP ("model")
+  "experts"   MoE expert dim                   → EP ("model" or "data")
+  "rnn"       recurrence width                 → TP ("model")
+  "layers"    scan dim                         → never sharded
+  None        replicated small vectors
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class P:
+    """Declarative parameter leaf."""
+
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"        # normal | zeros | ones | scaled (fan-in)
+    dtype: Any = jnp.bfloat16
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape {self.shape} / axes {self.axes} mismatch")
+
+
+def is_leaf(x) -> bool:
+    return isinstance(x, P)
+
+
+def tree_map_params(fn: Callable[[P], Any], tree):
+    return jax.tree.map(fn, tree, is_leaf=is_leaf)
+
+
+def abstractify(tree):
+    """P tree -> ShapeDtypeStruct tree (no allocation; dry-run input)."""
+    return tree_map_params(lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype), tree)
+
+
+def axes_tree(tree):
+    """P tree -> logical-axes tree (same structure, tuple leaves)."""
+    return tree_map_params(lambda p: p.axes, tree)
+
+
+def _init_leaf(p: P, key) -> jax.Array:
+    if p.init == "zeros":
+        return jnp.zeros(p.shape, p.dtype)
+    if p.init == "neg_ones":
+        return jnp.full(p.shape, -1, p.dtype)
+    if p.init == "ones":
+        return jnp.ones(p.shape, p.dtype)
+    if p.init == "normal":
+        return (0.02 * jax.random.normal(key, p.shape, jnp.float32)).astype(p.dtype)
+    if p.init == "scaled":  # fan-in scaled (1/sqrt(fan_in) over last-but-one dim)
+        fan_in = p.shape[-2] if len(p.shape) >= 2 else p.shape[-1]
+        std = 1.0 / math.sqrt(max(1, fan_in))
+        return (std * jax.random.normal(key, p.shape, jnp.float32)).astype(p.dtype)
+    raise ValueError(f"unknown init {p.init!r}")
+
+
+def materialize(tree, key) -> Any:
+    """P tree -> concrete arrays.  Deterministic per-leaf key derivation
+    (path-hash folded into the base key) so init is stable under tree edits."""
+    leaves = jax.tree.leaves_with_path(tree, is_leaf=is_leaf)
+    out = {}
+    arrays = []
+    for path, p in leaves:
+        path_str = jax.tree_util.keystr(path)
+        sub = jax.random.fold_in(key, hash(path_str) % (2**31 - 1))
+        arrays.append(_init_leaf(p, sub))
+    treedef = jax.tree.structure(tree, is_leaf=is_leaf)
+    return jax.tree.unflatten(treedef, arrays)
+
+
+def count_params(tree) -> int:
+    return sum(int(np.prod(p.shape)) for p in jax.tree.leaves(tree, is_leaf=is_leaf))
+
+
+def param_bytes(tree) -> int:
+    return sum(int(np.prod(p.shape)) * jnp.dtype(p.dtype).itemsize
+               for p in jax.tree.leaves(tree, is_leaf=is_leaf))

@@ -1,0 +1,88 @@
+"""Minimal-but-production AdamW (decoupled weight decay) + schedules.
+
+Used by: the training launcher, PTQ1.61 block-wise scale optimization
+(paper: AdamW, zero weight decay, lr 5e-4/1e-3), and restorative-LoRA
+preprocessing.  Pure pytree-in/pytree-out; state shards like params.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+Tree = Any
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Tree
+    nu: Tree
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    clip_norm: Optional[float] = None
+    schedule: Optional[Callable[[jax.Array], jax.Array]] = None
+    # dtype for first/second moments; fp32 master moments by default
+    state_dtype: Any = jnp.float32
+
+    def init(self, params: Tree) -> AdamWState:
+        z = lambda p: jnp.zeros(p.shape, self.state_dtype)
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          mu=jax.tree.map(z, params),
+                          nu=jax.tree.map(z, params))
+
+    def update(self, grads: Tree, state: AdamWState,
+               params: Tree) -> tuple[Tree, AdamWState]:
+        step = state.step + 1
+        if self.clip_norm is not None:
+            gnorm = global_norm(grads)
+            scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        b1, b2 = self.b1, self.b2
+        lr = self.lr if self.schedule is None else self.lr * self.schedule(step)
+
+        def upd(g, m, v, p):
+            gf = g.astype(self.state_dtype)
+            m = b1 * m + (1 - b1) * gf
+            v = b2 * v + (1 - b2) * jnp.square(gf)
+            mhat = m / (1 - b1 ** step.astype(self.state_dtype))
+            vhat = v / (1 - b2 ** step.astype(self.state_dtype))
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            if self.weight_decay:
+                delta = delta + self.weight_decay * p.astype(self.state_dtype)
+            return (p.astype(self.state_dtype) - lr * delta).astype(p.dtype), m, v
+
+        # flatten/unflatten (not a tuple-leaf tree_map) because param trees
+        # may legitimately contain tuple nodes (scanned stage patterns)
+        g_l, treedef = jax.tree.flatten(grads)
+        out = [upd(g, m, v, p) for g, m, v, p in
+               zip(g_l, jax.tree.leaves(state.mu), jax.tree.leaves(state.nu),
+                   jax.tree.leaves(params))]
+        new_params = jax.tree.unflatten(treedef, [t[0] for t in out])
+        mu = jax.tree.unflatten(treedef, [t[1] for t in out])
+        nu = jax.tree.unflatten(treedef, [t[2] for t in out])
+        return new_params, AdamWState(step, mu, nu)
+
+
+def global_norm(tree: Tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def cosine_schedule(warmup: int, total: int, floor: float = 0.1):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = s / max(1, warmup)
+        prog = jnp.clip((s - warmup) / max(1, total - warmup), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(math.pi * prog))
+        return jnp.where(s < warmup, warm, cos)
+    return fn

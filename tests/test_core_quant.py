@@ -1,0 +1,162 @@
+"""Core PTQ1.61 behaviour: calibrated pipeline, block-wise optimization,
+bit accounting, preprocessing — on a tiny model (fast CPU scale)."""
+import dataclasses
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.core import blockwise
+from repro.core.bits import model_bits, paper_closed_form, qlinear_bits
+from repro.core.pipeline import (quantize_model_ptq161,
+                                 quantize_params_data_free)
+from repro.core.preprocess import PreprocessConfig, restorative_lora
+from repro.core.qlinear import QLinear, QuantConfig, quantize_linear
+from repro.data.synthetic import CorpusConfig, SyntheticCorpus
+from repro.models import model as M
+from repro.models.common import Parallel
+
+PAR = Parallel(remat=False, attn_chunk=64)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = registry.get("tiny-lm").reduced()
+    params = M.init_params(cfg, PAR, jax.random.PRNGKey(0))
+    corpus = SyntheticCorpus(CorpusConfig(vocab=cfg.vocab))
+    return cfg, params, corpus
+
+
+def eval_loss(cfg, params, corpus, n=2):
+    tot = 0.0
+    for tok, tgt in corpus.batches(4, 64, n, split="valid"):
+        tot += float(M.forward_loss(cfg, PAR, params, {
+            "tokens": jnp.asarray(tok), "targets": jnp.asarray(tgt)}))
+    return tot / n
+
+
+def test_appendix_a_bit_accounting():
+    """The paper's worked example: 4096×4096, 20% salient → ≈1.61 b/w."""
+    rep = paper_closed_form(4096, 4096, 0.2)
+    # int(0.2·4096)=819 (not 819.2) → weight bits 1.59985, matching the
+    # paper's own rounding to 1.6
+    assert abs(rep.weight_bits - 1.6) < 1e-3
+    assert abs(rep.index_bits - 0.000244) < 1e-4
+    # scales+zeros: (2N + k_b + 2k_s)·16/(K·N) = 0.0125 b/w — the paper
+    # reports 0.008 by dividing by its bit total rather than the weight
+    # count; we keep the per-weight denominator (stricter)
+    assert rep.additional_bits < 0.02
+    assert 1.60 < rep.total_bits < 1.62
+
+
+def test_qlinear_bits_match_closed_form(rng):
+    w = jnp.asarray(rng.normal(size=(4096, 128)) * 0.02, jnp.float32)
+    q = quantize_linear(w, None, QuantConfig(ratio=0.2, multiple=128))
+    rep = qlinear_bits(q)
+    assert abs(rep.weight_bits - 1.6) < 0.05
+    assert rep.total_bits < 1.75   # small N inflates per-col scale share
+
+
+def test_packed_storage_is_sub2bit(rng):
+    """Actual packed bytes of a QLinear ≤ 2.0 bits/weight equivalent."""
+    k, n = 2048, 512
+    w = jnp.asarray(rng.normal(size=(k, n)) * 0.02, jnp.float32)
+    q = quantize_linear(w, None, QuantConfig(ratio=0.2, multiple=128))
+    bits_per_w = 8.0 * q.packed_bytes() / (k * n)
+    # perm (int32) is derivable from the 1-bit mask at load time; exclude
+    bits_per_w -= 8.0 * q.perm.size * 4 / (k * n)
+    assert bits_per_w < 2.0, bits_per_w
+
+
+def test_calibrated_pipeline_beats_data_free(tiny):
+    """Learnable scales (Eq. 7) must not be worse than analytic init on
+    the calibration distribution (paper Table 3 rows 2 vs 4)."""
+    cfg, params, corpus = tiny
+    calib = [{"tokens": jnp.asarray(t)} for t, _ in
+             corpus.batches(2, 64, 3, split="calib")]
+    qcfg = QuantConfig(ratio=0.2, multiple=16, steps=4)
+    q_learn = quantize_model_ptq161(cfg, PAR, params, calib, qcfg,
+                                    min_dim=32)
+    q_free = quantize_params_data_free(
+        params, dataclasses.replace(qcfg, learn_scales=False), min_dim=32)
+    l_learn = eval_loss(cfg, q_learn, corpus)
+    l_free = eval_loss(cfg, q_free, corpus)
+    assert np.isfinite(l_learn) and np.isfinite(l_free)
+    assert l_learn <= l_free + 0.05, (l_learn, l_free)
+
+
+def test_blockwise_metric_properties(rng):
+    f = jnp.asarray(rng.normal(size=(4, 32)), jnp.float32)
+    assert float(blockwise.metric(f, f)) < 1e-5          # identity ≈ 0
+    g = jnp.asarray(rng.normal(size=(4, 32)), jnp.float32)
+    m = float(blockwise.metric(f, g))
+    assert m > 0
+    # cosine term penalizes angular error beyond pure MSE
+    m_nocos = float(blockwise.metric(f, g, cosine=False))
+    assert m >= m_nocos
+
+
+def test_blockwise_optimization_reduces_block_error(tiny, rng):
+    """Eq. 7 objective decreases on the block it optimizes."""
+    cfg, params, _ = tiny
+    from repro.core.pipeline import _block_forward, tree_slice
+    fp_block = tree_slice(params["stages"][0][0], 0)
+    fwd = _block_forward(cfg, PAR, "dense")
+    x = [jnp.asarray(rng.normal(size=(2, 32, cfg.d_model)) * 0.3,
+                     jnp.bfloat16) for _ in range(2)]
+
+    def qblockify(qcfg):
+        from repro.core.select import map_quantizable
+        return map_quantizable(
+            fp_block, lambda p, w: quantize_linear(w, None, qcfg),
+            min_dim=32)
+
+    def obj(qb):
+        tot = 0.0
+        for xi in x:
+            y = fwd(fp_block, xi)
+            yq = fwd(qb, xi)
+            tot += float(blockwise.metric(y, yq))
+        return tot
+
+    q0 = qblockify(QuantConfig(ratio=0.25, multiple=16, steps=0))
+    before = obj(q0)
+    q1 = blockwise.optimize_block_scales(
+        fwd, fp_block, q0, x, x, QuantConfig(ratio=0.25, multiple=16,
+                                             steps=6))
+    after = obj(q1)
+    assert after <= before + 1e-6, (before, after)
+
+
+def test_preprocess_returns_full_precision_tree(tiny):
+    """Restorative LoRA merges into FP weights — same tree structure,
+    same shapes/dtypes, no QLinear leaves (paper §3.4: nothing extra
+    ships at inference)."""
+    cfg, params, corpus = tiny
+    batches = [{"tokens": jnp.asarray(t), "targets": jnp.asarray(g)}
+               for t, g in corpus.batches(2, 32, 2, split="calib")]
+    pp = restorative_lora(cfg, PAR, params, batches,
+                          QuantConfig(ratio=0.2, multiple=16),
+                          PreprocessConfig(rank=4, steps=4, lr=1e-4),
+                          min_dim=32)
+    assert jax.tree.structure(pp) == jax.tree.structure(params)
+    changed = 0
+    for a, b in zip(jax.tree.leaves(pp), jax.tree.leaves(params)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+        assert not isinstance(a, QLinear)
+        if np.abs(np.asarray(a, np.float32) -
+                  np.asarray(b, np.float32)).max() > 1e-6:
+            changed += 1
+    assert changed > 0, "preprocessing changed no weights"
+
+
+def test_model_bits_aggregate(tiny):
+    cfg, params, _ = tiny
+    qp = quantize_params_data_free(params,
+                                   QuantConfig(ratio=0.2, multiple=16),
+                                   min_dim=32)
+    rep = model_bits(qp)
+    assert rep["quantized_weights"] > 0
+    assert rep["avg_bits_per_quantized_weight"] < 4.0
+    assert 0 < rep["exempt_fraction"] < 1

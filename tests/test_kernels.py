@@ -1,0 +1,111 @@
+"""Pallas kernel sweeps: every kernel × shapes × dtypes against the
+pure-jnp oracle in repro.kernels.ref (interpret mode on CPU).
+
+Tolerances: the kernels feed bf16 operands to the MXU (jax.lax.dot with
+f32 accumulation) while the oracle contracts in f32, so per-element
+relative error scales like 2^-8·sqrt(K); assertions use an explicit
+K-scaled atol on top of 2% rtol.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import pack
+from repro.kernels import ref
+from repro.kernels.binary_matmul import binary_matmul
+from repro.kernels.int4_matmul import int4_matmul
+from repro.kernels.mixed_matmul import mixed_matmul
+
+
+def _tol(k, scale=1.0):
+    return {"rtol": 2e-2, "atol": 0.06 * np.sqrt(k) * scale}
+
+
+def make_binary(rng, k, n):
+    signs = rng.choice([-1.0, 1.0], size=(k, n)).astype(np.float32)
+    bits = pack.pack_bits(jnp.asarray(signs), axis=-2)
+    a_out = jnp.asarray(rng.uniform(0.5, 2.0, n), jnp.float32)
+    a_in = jnp.asarray(rng.uniform(0.5, 2.0, k), jnp.float32)
+    return bits, a_out, a_in
+
+
+def make_int4(rng, k, n):
+    q = jnp.asarray(rng.integers(0, 16, size=(k, n)), jnp.uint8)
+    w4 = pack.pack_nibbles(q, axis=-2)
+    s4 = jnp.asarray(rng.uniform(0.01, 0.1, k), jnp.float32)
+    z4 = jnp.asarray(rng.integers(0, 16, k).astype(np.float32))
+    return w4, s4, z4
+
+
+@pytest.mark.parametrize("m,k,n", [
+    (8, 128, 128), (128, 256, 256), (64, 512, 384),
+    (256, 1024, 512), (32, 2048, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+def test_binary_matmul(rng, m, k, n, dtype):
+    x = jnp.asarray(rng.normal(size=(m, k)), dtype)
+    bits, a_out, a_in = make_binary(rng, k, n)
+    y_ref = ref.binary_matmul_ref(x, bits, a_out, a_in).astype(np.float32)
+    y = binary_matmul(x, bits, a_out, a_in, interpret=True).astype(np.float32)
+    np.testing.assert_allclose(y, y_ref, **_tol(k, 2.0))
+
+
+@pytest.mark.parametrize("m,k,n", [
+    (8, 128, 128), (128, 256, 256), (64, 512, 384), (16, 1024, 256),
+])
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+def test_int4_matmul(rng, m, k, n, dtype):
+    x = jnp.asarray(rng.normal(size=(m, k)), dtype)
+    w4, s4, z4 = make_int4(rng, k, n)
+    y_ref = ref.int4_matmul_ref(x, w4, s4, z4).astype(np.float32)
+    y = int4_matmul(x, w4, s4, z4, interpret=True).astype(np.float32)
+    np.testing.assert_allclose(y, y_ref, **_tol(k))
+
+
+@pytest.mark.parametrize("m,k_s,k_b,n", [
+    (8, 128, 384, 128), (64, 128, 512, 256),
+    (128, 256, 1024, 256), (32, 512, 512, 384),
+])
+def test_mixed_matmul(rng, m, k_s, k_b, n):
+    k = k_s + k_b
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.bfloat16)
+    w4, s4, z4 = make_int4(rng, k_s, n)
+    bits, a_out, a_in = make_binary(rng, k_b, n)
+    y_ref = ref.mixed_matmul_ref(x, w4, s4, z4, bits, a_out, a_in)
+    y = mixed_matmul(x, w4, s4, z4, bits, a_out, a_in, interpret=True)
+    np.testing.assert_allclose(y.astype(np.float32),
+                               y_ref.astype(np.float32), **_tol(k, 2.0))
+
+
+def test_mixed_matches_qlinear_forward(rng):
+    """ops.mixed_matmul(x, qlinear) == the XLA dequant forward."""
+    from repro.core.qlinear import QuantConfig, quantize_linear
+    from repro.kernels import ops
+    import dataclasses
+
+    k, n = 640, 256
+    w = jnp.asarray(rng.normal(size=(k, n)) * 0.05, jnp.float32)
+    stat = jnp.asarray(rng.uniform(0.1, 10.0, k), jnp.float32)
+    q = quantize_linear(w, stat, QuantConfig(ratio=0.2, multiple=128,
+                                             use_kernel=False))
+    x = jnp.asarray(rng.normal(size=(4, k)), jnp.bfloat16)
+    y_xla = q.__matmul_x__(x).astype(np.float32)
+    y_ker = ops.mixed_matmul(x, q).astype(np.float32)
+    np.testing.assert_allclose(y_ker, y_xla, rtol=2e-2,
+                               atol=0.06 * np.sqrt(k))
+
+
+def test_kernel_block_shape_sweep(rng):
+    """Block-shape sweep: results must be block-size independent."""
+    m, k, n = 128, 512, 256
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.bfloat16)
+    bits, a_out, a_in = make_binary(rng, k, n)
+    base = binary_matmul(x, bits, a_out, a_in, bm=128, bn=128, bk=128,
+                         interpret=True)
+    for bm, bn, bk in [(64, 64, 64), (128, 256, 512), (32, 128, 256)]:
+        y = binary_matmul(x, bits, a_out, a_in, bm=bm, bn=bn, bk=bk,
+                          interpret=True)
+        np.testing.assert_allclose(np.asarray(y, np.float32),
+                                   np.asarray(base, np.float32),
+                                   rtol=1e-2, atol=0.5)

@@ -1,0 +1,130 @@
+"""Hypothesis property tests for packing and quantization invariants."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import binarize, int4, pack
+from repro.core.saliency import round_salient, structured_mask
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+@given(st.integers(1, 8).map(lambda i: i * 8), st.integers(1, 24),
+       st.integers(0, 2**31 - 1))
+def test_pack_bits_roundtrip(k, n, seed):
+    rng = np.random.default_rng(seed)
+    signs = rng.choice([-1.0, 1.0], size=(k, n)).astype(np.float32)
+    packed = pack.pack_bits(jnp.asarray(signs), axis=-2)
+    assert packed.shape == (k // 8, n) and packed.dtype == jnp.uint8
+    out = pack.unpack_bits(packed, axis=-2, dtype=jnp.float32)
+    np.testing.assert_array_equal(np.asarray(out), signs)
+
+
+@given(st.integers(1, 12).map(lambda i: i * 2), st.integers(1, 24),
+       st.integers(0, 2**31 - 1))
+def test_pack_nibbles_roundtrip(k, n, seed):
+    rng = np.random.default_rng(seed)
+    q = rng.integers(0, 16, size=(k, n)).astype(np.uint8)
+    packed = pack.pack_nibbles(jnp.asarray(q), axis=-2)
+    assert packed.shape == (k // 2, n)
+    out = pack.unpack_nibbles(packed, axis=-2, dtype=jnp.float32)
+    np.testing.assert_array_equal(np.asarray(out), q.astype(np.float32))
+
+
+@given(st.integers(2, 6).map(lambda i: i * 8), st.integers(2, 16),
+       st.integers(0, 2**31 - 1))
+def test_stacked_pack_roundtrip(k, n, seed):
+    """(L, K, N) stacked weights pack identically per slice."""
+    rng = np.random.default_rng(seed)
+    signs = rng.choice([-1.0, 1.0], size=(3, k, n)).astype(np.float32)
+    packed = pack.pack_bits(jnp.asarray(signs), axis=-2)
+    assert packed.shape == (3, k // 8, n)
+    for i in range(3):
+        one = pack.pack_bits(jnp.asarray(signs[i]), axis=-2)
+        np.testing.assert_array_equal(np.asarray(packed[i]), np.asarray(one))
+
+
+@given(st.integers(4, 64), st.integers(4, 32), st.integers(0, 2**31 - 1))
+def test_int4_dequant_error_bound(k, n, seed):
+    """|w − dq(q(w))| ≤ 2·s per element on zero-SPANNING rows (s/2
+    round-to-nearest + s/2 zero-point rounding + ≤s clipped extreme
+    level).  Single-signed rows clamp the zero-point and lose the bound
+    — irrelevant for weight rows, which span zero, but excluded here."""
+    rng = np.random.default_rng(seed)
+    wn = rng.normal(size=(k, n)).astype(np.float32)
+    wn[:, 0] = -np.abs(wn[:, 0]) - 0.1   # force both signs per row
+    wn[:, 1] = +np.abs(wn[:, 1]) + 0.1
+    w = jnp.asarray(wn)
+    d = int4.quantize_int4(w)
+    back = int4.dequant_int4(d["q"], d["s"], d["z"], dtype=jnp.float32)
+    err = np.abs(np.asarray(back) - np.asarray(w))
+    bound = 2.0 * np.asarray(d["s"])[:, None] + 1e-5
+    assert (err <= bound + 1e-6).all()
+
+
+@given(st.integers(4, 64), st.integers(4, 32), st.integers(0, 2**31 - 1))
+def test_binarize_alpha_is_l1_optimal(k, n, seed):
+    """α = mean|w| minimizes ‖w − α·sign(w)‖² over α (XNOR-Net lemma):
+    perturbing α in either direction never reduces the error."""
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=(k, n)).astype(np.float32)
+    b = binarize.binarize_init(jnp.asarray(w))
+    alpha = np.asarray(b["alpha_s"])
+    sign = np.sign(w) + (w == 0)
+    base = ((w - alpha[None, :] * sign) ** 2).sum(0)
+    for eps in (0.99, 1.01):
+        pert = ((w - (alpha * eps)[None, :] * sign) ** 2).sum(0)
+        assert (pert >= base - 1e-5).all()
+
+
+@given(st.integers(128, 4096), st.floats(0.05, 0.45),
+       st.sampled_from([16, 64, 128]))
+def test_round_salient_bounds(k, ratio, multiple):
+    if k <= 2 * multiple:
+        return
+    k_s = round_salient(k, ratio, multiple)
+    assert multiple <= k_s <= k - multiple
+    assert k_s % multiple == 0
+
+
+@given(st.integers(2, 32), st.integers(0, 2**31 - 1))
+def test_structured_mask_permutation(k8, seed):
+    """perm is a permutation; salient channels (top-k_s by stat) come
+    first in original relative order."""
+    k = k8 * 16
+    rng = np.random.default_rng(seed)
+    sal = jnp.asarray(rng.uniform(0, 10, k).astype(np.float32))
+    mask, perm, k_s = structured_mask(sal, 0.25, 16)
+    perm = np.asarray(perm)
+    mask = np.asarray(mask)
+    assert sorted(perm.tolist()) == list(range(k))
+    assert mask.sum() == k_s
+    # first k_s entries of perm are exactly the masked channels, ordered
+    front = perm[:k_s]
+    assert mask[front].all()
+    assert (np.diff(front) > 0).all()
+    # they really are the top-k_s by saliency
+    thresh = np.sort(np.asarray(sal))[-k_s]
+    assert (np.asarray(sal)[front] >= thresh - 1e-6).all()
+
+
+@given(st.integers(1, 4), st.integers(0, 2**31 - 1))
+def test_qlinear_todense_roundtrip(scale, seed):
+    """to_dense() inverts the salient-first permutation exactly, and the
+    binary part reconstructs α·sign at init (α_r = 1)."""
+    from repro.core.qlinear import QuantConfig, quantize_linear
+    rng = np.random.default_rng(seed)
+    k, n = 64 * scale, 32
+    w = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32) * 0.1)
+    stat = jnp.asarray(rng.uniform(0.1, 5.0, k).astype(np.float32))
+    q = quantize_linear(w, stat, QuantConfig(ratio=0.25, multiple=16))
+    dense = np.asarray(q.to_dense(jnp.float32))
+    assert dense.shape == (k, n)
+    # non-salient rows must equal α·sign(w) exactly
+    perm = np.asarray(q.perm)
+    wnp = np.asarray(w)
+    alpha = np.asarray(q.alpha_s)
+    for i in perm[q.k_s:]:
+        expect = alpha * np.sign(wnp[i] + (wnp[i] == 0))
+        np.testing.assert_allclose(dense[i], expect, rtol=1e-2, atol=1e-3)

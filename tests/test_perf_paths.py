@@ -1,0 +1,132 @@
+"""Equivalence tests for the §Perf optimized execution paths against
+their plain-JAX oracles (the optimizations must not change the math)."""
+import os
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import registry
+from repro.models import layers as L
+from repro.models import recurrent as R
+from repro.models.common import Parallel
+from repro.models.param import materialize
+
+
+# ---------------------------------------------------------------------------
+# sLSTM deferred-weight-gradient custom VJP == autodiff reference
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", [0, 3])
+def test_slstm_custom_vjp_matches_autodiff(seed):
+    cfg = registry.get("xlstm-1.3b").reduced()
+    p = materialize(R.init_slstm(cfg), jax.random.PRNGKey(1))
+    p_rec = {"r_gates": p["r_gates"].astype(jnp.float32),
+             "b_gates": p["b_gates"]}
+    rng = np.random.default_rng(seed)
+    b, t, d = 2, 7, cfg.d_model
+    zx = jnp.asarray(rng.normal(size=(b, t, 4 * d)) * 0.4, jnp.float32)
+    z = jnp.zeros((b, d), jnp.float32)
+    st = {"h": z, "c": z, "n": z + 1e-6, "m": z}
+
+    def mk(fn):
+        def loss(pr, zx):
+            stN, hs = fn(cfg, pr, zx, st)
+            return (jnp.sum(hs ** 2) + jnp.sum(stN["c"] ** 2) * 0.3
+                    + jnp.sum(stN["h"]) * 0.1)
+        return loss
+
+    v1 = mk(R._slstm_scan)(p_rec, zx)
+    v2 = mk(R._slstm_scan_ref)(p_rec, zx)
+    np.testing.assert_allclose(float(v1), float(v2), rtol=1e-5)
+    g1 = jax.grad(mk(R._slstm_scan), argnums=(0, 1))(p_rec, zx)
+    g2 = jax.grad(mk(R._slstm_scan_ref), argnums=(0, 1))(p_rec, zx)
+    for a, b2 in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        a = np.asarray(a, np.float32)
+        b2 = np.asarray(b2, np.float32)
+        den = np.abs(b2).max() + 1e-9
+        assert np.abs(a - b2).max() / den < 1e-4, a.shape
+
+
+# ---------------------------------------------------------------------------
+# shard_map MoE == plain dispatch (fwd and grad), multi-device
+# ---------------------------------------------------------------------------
+def test_moe_shard_map_matches_fallback():
+    if jax.device_count() < 4:
+        pytest.skip("needs ≥4 devices (run under the dryrun env)")
+    import dataclasses
+    cfg = registry.get("mixtral-8x22b").reduced()
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    p = materialize(L.init_moe(cfg), jax.random.PRNGKey(0))
+    p = jax.tree.map(lambda a: a.astype(jnp.float32), p)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(2, 16, cfg.d_model)) * 0.3,
+                    jnp.float32)
+    mesh = jax.make_mesh((2, 2), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    par = Parallel(tp=2, dp=2, remat=False, attn_chunk=32)
+
+    def loss(p, use_par):
+        return jnp.sum(L.apply_moe(cfg, p, x,
+                                   par if use_par else None) ** 2)
+
+    v1, g1 = jax.value_and_grad(lambda p: loss(p, False))(p)
+    with mesh:
+        v4, g4 = jax.jit(jax.value_and_grad(lambda p: loss(p, True)))(p)
+    np.testing.assert_allclose(float(v1), float(v4), rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g4)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode_unroll knob (kept despite being slower — must stay correct)
+# ---------------------------------------------------------------------------
+def test_decode_unroll_matches_scan():
+    from repro.models import model as M
+    cfg = registry.get("qwen3-4b").reduced()
+    par_scan = Parallel(remat=False, attn_chunk=32, decode_unroll=False)
+    par_unr = Parallel(remat=False, attn_chunk=32, decode_unroll=True)
+    params = M.init_params(cfg, par_scan, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    b, s, max_seq = 2, 12, 32
+    toks = jnp.asarray(rng.integers(1, cfg.vocab - 1, (b, s + 1)),
+                       jnp.int32)
+    batch = {"tokens": toks[:, :s]}
+    _, caches = M.prefill(cfg, par_scan, params, batch, max_seq)
+    pos = jnp.full((b,), s, jnp.int32)
+    l1, c1 = M.decode_step(cfg, par_scan, params, toks[:, s], pos, caches,
+                           max_seq)
+    l2, c2 = M.decode_step(cfg, par_unr, params, toks[:, s], pos, caches,
+                           max_seq)
+    np.testing.assert_allclose(np.asarray(l1, np.float32),
+                               np.asarray(l2, np.float32),
+                               rtol=5e-2, atol=5e-2)
+    for a, b2 in zip(jax.tree.leaves(c1), jax.tree.leaves(c2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b2, np.float32),
+                                   rtol=5e-2, atol=5e-2)
+
+
+# ---------------------------------------------------------------------------
+# bf16 attention == f32 oracle within accumulation tolerance
+# ---------------------------------------------------------------------------
+def test_bf16_attention_close_to_f32_oracle(rng):
+    b, sq, sk, hq, hkv, dh = 2, 4, 16, 8, 4, 16
+    q = jnp.asarray(rng.normal(size=(b, sq, hq, dh)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(b, sk, hkv, dh)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(b, sk, hkv, dh)), jnp.bfloat16)
+    mask = jnp.tril(jnp.ones((1, sq, sk), bool), k=sk - sq)
+    o = L._attend(q, k, v, mask, None)
+
+    import math
+    qf = q.astype(jnp.float32).reshape(b, sq, hkv, hq // hkv, dh)
+    s = jnp.einsum("bqhrd,bkhd->bhrqk", qf, k.astype(jnp.float32))
+    s = s / math.sqrt(dh)
+    s = jnp.where(mask[:, None, None, :, :], s, -1e30)
+    w = jax.nn.softmax(s, -1)
+    o_ref = jnp.einsum("bhrqk,bkhd->bqhrd", w, v.astype(jnp.float32))
+    o_ref = o_ref.reshape(b, sq, hq, dh)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o_ref, np.float32),
+                               rtol=5e-2, atol=5e-2)

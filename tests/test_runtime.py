@@ -1,0 +1,164 @@
+"""Serving engine, data pipeline, recurrent-cell equivalences."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import registry
+from repro.data.synthetic import (CorpusConfig, SyntheticCorpus,
+                                  calibration_set)
+from repro.models import model as M
+from repro.models import recurrent as R
+from repro.models.common import Parallel
+from repro.runtime.engine import Engine
+
+PAR = Parallel(remat=False, attn_chunk=32)
+
+
+# ---------------------------------------------------------------------------
+# Synthetic corpus
+# ---------------------------------------------------------------------------
+def test_corpus_determinism():
+    c1 = SyntheticCorpus(CorpusConfig(seed=7))
+    c2 = SyntheticCorpus(CorpusConfig(seed=7))
+    np.testing.assert_array_equal(c1.document(5, 64), c2.document(5, 64))
+    assert not np.array_equal(c1.document(5, 64), c1.document(6, 64))
+
+
+def test_corpus_host_sharding_disjoint():
+    c = SyntheticCorpus(CorpusConfig())
+    got = []
+    for host in range(2):
+        for tok, _ in c.batches(2, 16, 2, host=host, n_hosts=2):
+            got.append(tok)
+    # host-0 and host-1 batches must differ (disjoint documents)
+    assert not np.array_equal(got[0], got[2])
+
+
+def test_corpus_has_learnable_structure():
+    """Bigram process: the same prefix token constrains successors to the
+    `branch` table — mutual information is present."""
+    c = SyntheticCorpus(CorpusConfig(vocab=256, branch=4))
+    doc = c.document(0, 2000)
+    succ = {}
+    for a, b in zip(doc[:-1], doc[1:]):
+        succ.setdefault(int(a), set()).add(int(b))
+    multi = [len(v) for t, v in succ.items() if len(v) > 0]
+    assert np.mean(multi) <= 4 + 1e-9          # bounded out-degree
+
+
+def test_calibration_set_shape():
+    c = SyntheticCorpus(CorpusConfig())
+    calib = calibration_set(c, n_segments=4, seq=128)
+    assert len(calib) == 4
+    assert calib[0][0].shape == (1, 128)
+
+
+# ---------------------------------------------------------------------------
+# Recurrent cell: sequence form == step form (the decode contract)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("kind", ["rglru", "mlstm", "slstm"])
+def test_recurrent_seq_equals_steps(kind, rng):
+    cfg = registry.get({"rglru": "recurrentgemma-2b",
+                        "mlstm": "xlstm-1.3b",
+                        "slstm": "xlstm-1.3b"}[kind]).reduced()
+    from repro.models.param import materialize
+    init = {"rglru": R.init_rglru, "mlstm": R.init_mlstm,
+            "slstm": R.init_slstm}[kind]
+    p = materialize(init(cfg), jax.random.PRNGKey(1))
+    b, s = 2, 8
+    x = jnp.asarray(rng.normal(size=(b, s, cfg.d_model)) * 0.3, jnp.float32)
+
+    if kind == "rglru":
+        y_seq, hN, conv = R.rglru_seq(cfg, p, x)
+        h = jnp.zeros((b, cfg.rnn_width or cfg.d_model), jnp.float32)
+        conv_s = jnp.zeros((b, cfg.conv_width - 1,
+                            cfg.rnn_width or cfg.d_model), x.dtype)
+        outs = []
+        for t in range(s):
+            o, h, conv_s = R.rglru_step(cfg, p, x[:, t:t+1], h, conv_s)
+            outs.append(o)
+    elif kind == "mlstm":
+        y_seq, st = R.mlstm_seq(cfg, p, x, chunk=4)
+        state = None
+        outs = []
+        dk = cfg.d_model // cfg.n_heads
+        dv = int(cfg.mlstm_proj_factor * cfg.d_model) // cfg.n_heads
+        state = {"c": jnp.zeros((b, cfg.n_heads, dk, dv)),
+                 "n": jnp.zeros((b, cfg.n_heads, dk))}
+        for t in range(s):
+            o, state = R.mlstm_step(cfg, p, x[:, t:t+1], state)
+            outs.append(o)
+    else:
+        y_seq, st = R.slstm_seq(cfg, p, x)
+        d = cfg.d_model
+        state = {k: jnp.zeros((b, d)) for k in ("h", "c", "m")}
+        state["n"] = jnp.zeros((b, d)) + 1e-6
+        outs = []
+        for t in range(s):
+            o, state = R.slstm_step(cfg, p, x[:, t:t+1], state)
+            outs.append(o)
+
+    y_step = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_seq, np.float32),
+                               np.asarray(y_step, np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+# ---------------------------------------------------------------------------
+# Serving engine
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def engine():
+    cfg = registry.get("tiny-lm").reduced()
+    params = M.init_params(cfg, PAR, jax.random.PRNGKey(0))
+    return cfg, Engine(cfg, PAR, params, n_slots=2, max_seq=64,
+                       prefill_buckets=(16, 32))
+
+
+def test_engine_completes_requests(engine, rng):
+    cfg, eng = engine
+    reqs = [eng.submit(rng.integers(1, cfg.vocab, size=n).astype(np.int32),
+                       max_new=5) for n in (4, 9, 13)]
+    eng.run()
+    assert all(r.done for r in reqs)
+    assert all(len(r.out_tokens) == 5 for r in reqs)
+
+
+def test_engine_greedy_matches_decode_reference(rng):
+    """Engine decode (continuous batching, slot splicing, ring cache)
+    must reproduce a manual prefill + decode_step loop.  (Comparing
+    against re-prefilling the growing sequence is covered — with
+    tolerance — by test_prefill_decode_consistency; exact token equality
+    on an untrained model is only meaningful against the same incremental
+    cache path, since near-tied bf16 logits flip argmax.)"""
+    cfg = registry.get("tiny-lm").reduced()
+    params = M.init_params(cfg, PAR, jax.random.PRNGKey(0))
+    prompt = rng.integers(1, cfg.vocab, size=7).astype(np.int32)
+    max_seq = 32
+
+    eng = Engine(cfg, PAR, params, n_slots=1, max_seq=max_seq,
+                 prefill_buckets=(8, 16))
+    r = eng.submit(prompt, max_new=4)
+    eng.run()
+
+    # reference: the same left-padded bucket prefill + decode_step loop
+    b = 8  # bucket for a 7-token prompt
+    toks = np.zeros((1, b), np.int32)
+    toks[0, -len(prompt):] = prompt
+    positions = np.maximum(
+        np.arange(b, dtype=np.int32) - (b - len(prompt)), 0)[None]
+    logits, caches = M.prefill(cfg, PAR, params,
+                               {"tokens": jnp.asarray(toks),
+                                "positions": jnp.asarray(positions)},
+                               max_seq)
+    out = [int(jnp.argmax(logits[0, -1]))]
+    pos = len(prompt)
+    while len(out) < 4:
+        lg, caches = M.decode_step(cfg, PAR, params,
+                                   jnp.asarray([out[-1]], jnp.int32),
+                                   jnp.asarray([pos], jnp.int32),
+                                   caches, max_seq)
+        out.append(int(jnp.argmax(lg[0])))
+        pos += 1
+    assert r.out_tokens == out
