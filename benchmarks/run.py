@@ -12,12 +12,13 @@ import traceback
 
 from benchmarks import (appendix_b_masks, bits_accounting, fig5_preprocess,
                         fig6_ratio_sweep, kernel_bench, roofline,
-                        table1_ppl, table2_tasks, table3_ablation,
-                        table8_resources, table12_memory)
+                        serving_bench, table1_ppl, table2_tasks,
+                        table3_ablation, table8_resources, table12_memory)
 
 SUITES = [
     ("bits_accounting", bits_accounting.run),
     ("kernel_bench", kernel_bench.run),
+    ("serving_bench", serving_bench.run),
     ("table12_memory", table12_memory.run),
     ("roofline", roofline.run),
     ("table1_ppl", table1_ppl.run),

@@ -1,0 +1,97 @@
+"""Serving-runtime benchmark: contiguous vs paged KV cache under load.
+
+Sweeps the request load (requests ≫ slots) over the tiny-lm subject and
+reports, per backend, the engine's own metrics — tokens/s, time-to-first
+-token, queue depth and page utilization — plus the KV memory each
+backend actually reserves.  The point of the sweep: the contiguous
+backend's cache is `n_slots × max_seq` no matter what arrives, while the
+paged backend's footprint follows the resident tokens; a constrained
+pool row exercises the preemption path so the recovery cost is visible
+next to the full-parity numbers rather than hidden in a unit test.
+
+Emits a BENCH json (results/bench/serving_bench.json).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import markdown_table, write_result
+from repro.configs import registry
+from repro.models import model as M
+from repro.models.common import Parallel
+from repro.runtime.engine import Engine
+from repro.runtime.paged_cache import pages_for_tokens
+
+PAR = Parallel(remat=False, attn_chunk=32)
+N_SLOTS, MAX_SEQ, PAGE = 4, 128, 16
+MAX_NEW = 16
+
+
+def kv_bytes(cfg, *, paged: bool, pool_pages: int = 0) -> int:
+    """Reserved KV bytes (k+v, bf16) for the tiny-lm dense stack."""
+    hkv = cfg.n_kv_heads
+    per_tok = 2 * hkv * cfg.head_dim_ * 2 * cfg.n_layers
+    toks = pool_pages * PAGE if paged else N_SLOTS * MAX_SEQ
+    return toks * per_tok
+
+
+def bench_one(cfg, params, n_requests: int, *, paged: bool,
+              pool_pages=None, seed: int = 0) -> dict:
+    eng = Engine(cfg, PAR, params, n_slots=N_SLOTS, max_seq=MAX_SEQ,
+                 prefill_buckets=(16, 64), paged=paged, page_size=PAGE,
+                 pool_pages=pool_pages, seed=seed)
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for _ in range(n_requests):
+        plen = int(rng.integers(4, MAX_SEQ // 4))
+        prompt = rng.integers(1, cfg.vocab, size=plen).astype(np.int32)
+        reqs.append(eng.submit(prompt, max_new=MAX_NEW))
+    t0 = time.time()
+    eng.run()
+    wall = time.time() - t0
+    snap = eng.metrics.snapshot()
+    pool = (pool_pages if pool_pages is not None
+            else N_SLOTS * pages_for_tokens(MAX_SEQ, PAGE)) if paged else 0
+    return {
+        "backend": eng.backend.name + ("(tight)" if pool_pages else ""),
+        "requests": n_requests,
+        "all_done": all(r.done for r in reqs),
+        "tokens_per_s": snap["generated_tokens"] / max(wall, 1e-9),
+        "ttft_mean_s": snap["ttft_mean_s"],
+        "queue_depth_max": snap["queue_depth_max"],
+        "page_util_mean": snap["page_util_mean"],
+        "page_util_max": snap["page_util_max"],
+        "preemptions": snap["preemptions"],
+        "kv_mb_reserved": kv_bytes(cfg, paged=paged, pool_pages=pool) / 1e6,
+    }
+
+
+def run(quick: bool = False) -> dict:
+    cfg = registry.get("tiny-lm").reduced()
+    params = M.init_params(cfg, PAR, jax.random.PRNGKey(0))
+    loads = (N_SLOTS, 3 * N_SLOTS) if quick else \
+        (N_SLOTS, 2 * N_SLOTS, 4 * N_SLOTS)
+    # tight pool: enough for ~2.5 full-length requests across 4 slots —
+    # forces exhaustion → preemption under the higher loads
+    tight = int(2.5 * pages_for_tokens(MAX_SEQ // 4 + MAX_NEW, PAGE))
+    rows = []
+    for n in loads:
+        rows.append(bench_one(cfg, params, n, paged=False))
+        rows.append(bench_one(cfg, params, n, paged=True))
+        rows.append(bench_one(cfg, params, n, paged=True,
+                              pool_pages=tight))
+    payload = {"n_slots": N_SLOTS, "max_seq": MAX_SEQ, "page_size": PAGE,
+               "tight_pool_pages": tight, "rows": rows}
+    write_result("serving_bench", payload)
+    print(markdown_table(rows, ["backend", "requests", "tokens_per_s",
+                                "ttft_mean_s", "queue_depth_max",
+                                "page_util_max", "preemptions",
+                                "kv_mb_reserved"]))
+    return payload
+
+
+if __name__ == "__main__":
+    run()

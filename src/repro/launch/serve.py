@@ -6,6 +6,11 @@ batching engine over a stream of requests (deliverable b, serving flavor).
 Weights are quantized data-free (fast path) or with the full calibrated
 pipeline (--calibrated).  ``--kernel`` dispatches the fused Pallas
 mixed_matmul (interpret mode on CPU) instead of the XLA dequant path.
+``--paged`` serves from the paged KV cache (block-table allocator +
+FCFS/preemption scheduler; see repro.runtime.paged_cache) with
+``--page-size`` tokens per page and a ``--pool-pages`` global budget;
+engine metrics (tokens/s, TTFT, queue depth, page utilization) are
+included in the JSON output either way.
 """
 from __future__ import annotations
 
@@ -65,7 +70,9 @@ def run(args):
 
     engine = Engine(cfg, par, qparams, n_slots=args.slots,
                     max_seq=args.max_seq,
-                    prefill_buckets=(args.max_seq // 8, args.max_seq // 2))
+                    prefill_buckets=(args.max_seq // 8, args.max_seq // 2),
+                    paged=args.paged, page_size=args.page_size,
+                    pool_pages=args.pool_pages)
 
     rng = np.random.default_rng(args.seed)
     reqs = []
@@ -73,7 +80,8 @@ def run(args):
         plen = int(rng.integers(4, args.max_seq // 4))
         prompt = corpus.document(10_000 + i, plen)
         reqs.append(engine.submit(prompt, max_new=args.max_new,
-                                  temperature=args.temperature))
+                                  temperature=args.temperature,
+                                  deadline_s=args.deadline_s))
 
     t0 = time.time()
     engine.run()
@@ -87,6 +95,8 @@ def run(args):
         "all_done": all(r.done for r in reqs),
         "quantize_mode": args.quantize,
         "quantize_s": t_quant,
+        "cache_backend": engine.backend.name,
+        "engine_metrics": engine.metrics.snapshot(),
     }
     print(json.dumps(out, indent=2))
     if args.json_out:
@@ -111,6 +121,15 @@ def parse_args(argv=None):
     p.add_argument("--calib-seq", type=int, default=64)
     p.add_argument("--requests", type=int, default=8)
     p.add_argument("--slots", type=int, default=4)
+    p.add_argument("--paged", action="store_true",
+                   help="paged KV cache (block tables + shared page pool)")
+    p.add_argument("--page-size", type=int, default=16,
+                   help="tokens per KV page (paged mode)")
+    p.add_argument("--pool-pages", type=int, default=None,
+                   help="total pages in the pool (default: full parity "
+                        "with the contiguous layout, slots*max_seq/page)")
+    p.add_argument("--deadline-s", type=float, default=None,
+                   help="per-request admission deadline in seconds")
     p.add_argument("--max-seq", type=int, default=128)
     p.add_argument("--max-new", type=int, default=16)
     p.add_argument("--temperature", type=float, default=0.0)

@@ -240,6 +240,9 @@ def attention_full(cfg: ArchConfig, par: Parallel, p: Tree, x: jax.Array,
         sq = q.shape[1]
         qp, kp = positions[:, :, None], kv_positions[:, None, :]
         mask = kp <= qp if causal else jnp.ones((1, sq, sk), bool)
+        # position -1 marks padding (engine left-pad); never attended —
+        # the chunked path below has always masked pb >= 0 the same way
+        mask = jnp.logical_and(mask, kp >= 0)
         if window is not None:
             mask = jnp.logical_and(mask, qp - kp < window)
         o = _attend(q, k, v, mask, cfg.logit_softcap)
@@ -306,6 +309,109 @@ def attention_decode(cfg: ArchConfig, par: Parallel, p: Tree, x: jax.Array,
     if window is not None:
         mask = jnp.logical_and(mask, qp - kp < window)
     o = _attend(q, ck, cv, mask, cfg.logit_softcap)
+    o = o.astype(x.dtype).reshape(b, 1, -1)
+    return dense(o, p["wo"]), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Paged attention (serving runtime)
+# ---------------------------------------------------------------------------
+def make_paged_cache(cfg: ArchConfig, par: Parallel, num_pages: int,
+                     page_size: int, n_layers: int,
+                     dtype=jnp.bfloat16) -> Dict[str, P]:
+    """KV *page pool* declaration for one scanned stack of ``n_layers``.
+
+    Unlike :func:`make_cache` there is no per-slot position array: the
+    layout is position-aligned (token ``t`` of a request lives at page
+    ``block_table[t // page_size]``, slot ``t % page_size``), so the
+    decode mask derives key positions from block/slot indices.  Reused
+    pages therefore need no clearing — stale slots are masked out by the
+    new owner's context length.
+    """
+    dh = cfg.head_dim_
+    hkv = par.kv_heads_run(cfg.n_kv_heads, cfg.n_heads)
+    shape = (n_layers, num_pages, page_size, hkv, dh)
+    axes = ("layers", None, None, "kv_heads", None)
+    return {"k": P(shape, axes, "zeros", dtype),
+            "v": P(shape, axes, "zeros", dtype)}
+
+
+def paged_key_positions(block_tables: jax.Array, page_size: int) -> jax.Array:
+    """(B, nblk) block tables -> (B, nblk*page_size) implied key positions.
+
+    Slot ``j`` of block ``i`` holds position ``i*page_size + j``;
+    unassigned blocks (table entry < 0) yield position -1 (masked)."""
+    b, nblk = block_tables.shape
+    base = jnp.arange(nblk, dtype=jnp.int32)[:, None] * page_size
+    kp = (base + jnp.arange(page_size, dtype=jnp.int32)[None, :])  # (nblk,ps)
+    kp = jnp.broadcast_to(kp[None], (b, nblk, page_size))
+    kp = jnp.where(block_tables[:, :, None] >= 0, kp, -1)
+    return kp.reshape(b, nblk * page_size)
+
+
+def scatter_pages(pool: Dict[str, jax.Array], k: jax.Array, v: jax.Array,
+                  positions: jax.Array, bt_row: jax.Array) -> Dict[str, jax.Array]:
+    """Scatter prefill K/V into pool pages (all layers at once).
+
+    pool: {"k","v": (L, P, ps, hkv, dh)}; k/v: (L, S, hkv, dh) with the
+    per-token absolute ``positions`` (S,) int32 (−1 = padding, dropped);
+    ``bt_row`` (nblk,) is the owning request's block table.  Invalid
+    tokens are routed to the out-of-range page id ``P`` and dropped by
+    the scatter — no host-side compaction needed.
+    """
+    num_pages, ps = pool["k"].shape[1], pool["k"].shape[2]
+    t = positions.astype(jnp.int32)
+    tc = jnp.clip(t, 0)
+    blk = jnp.clip(tc // ps, 0, bt_row.shape[0] - 1)
+    # both invalid positions AND unassigned blocks (bt_row entry -1)
+    # route out of range — a -1 page id would wrap to the last pool page
+    # and corrupt another request's KV
+    valid = jnp.logical_and(t >= 0, bt_row[blk] >= 0)
+    page = jnp.where(valid, bt_row[blk], num_pages)      # OOR -> dropped
+    slot = tc % ps
+    return {"k": pool["k"].at[:, page, slot].set(k, mode="drop"),
+            "v": pool["v"].at[:, page, slot].set(v, mode="drop")}
+
+
+def attention_decode_paged(cfg: ArchConfig, par: Parallel, p: Tree,
+                           x: jax.Array, pos: jax.Array, cache: Tree,
+                           block_tables: jax.Array, *, layer: int,
+                           use_rope: bool = True,
+                           window: Optional[int] = None):
+    """Single-token decode against the shared page pool.
+
+    x: (B,1,D); pos: (B,) absolute positions; cache: {"k","v"} page pools
+    of shape (L, P, ps, hkv, dh); block_tables: (B, nblk) int32 page ids,
+    -1 = unassigned.  The new K/V scatter-writes into the owner's page
+    (requests with no page for ``pos`` — inactive slots — scatter to the
+    out-of-range sentinel and are dropped); the read gathers the request's
+    pages into a (B, nblk*ps, hkv, dh) context and masks by the implied
+    positions, so the whole step stays inside one jitted program.
+    """
+    b = x.shape[0]
+    q, k, v = _project_qkv(cfg, par, p, x, x, pos[:, None], pos[:, None],
+                           use_rope)
+    num_pages, ps = cache["k"].shape[1], cache["k"].shape[2]
+    nblk = block_tables.shape[1]
+    # -- write the new token's K/V into its page ------------------------
+    blk = jnp.clip(pos // ps, 0, nblk - 1)
+    bi = jnp.arange(b)
+    page = block_tables[bi, blk]                         # (B,)
+    page = jnp.where(page >= 0, page, num_pages)         # OOR -> dropped
+    slot = pos % ps
+    ck = cache["k"].at[layer, page, slot].set(k[:, 0], mode="drop")
+    cv = cache["v"].at[layer, page, slot].set(v[:, 0], mode="drop")
+    new_cache = {"k": ck, "v": cv}
+    # -- gather this request's pages and attend -------------------------
+    bt = jnp.clip(block_tables, 0)                       # (B, nblk)
+    k_ctx = ck[layer][bt].reshape(b, nblk * ps, -1, ck.shape[-1])
+    v_ctx = cv[layer][bt].reshape(b, nblk * ps, -1, cv.shape[-1])
+    kp = paged_key_positions(block_tables, ps)           # (B, nblk*ps)
+    qp = pos[:, None, None]
+    mask = jnp.logical_and(kp[:, None, :] <= qp, kp[:, None, :] >= 0)
+    if window is not None:
+        mask = jnp.logical_and(mask, qp - kp[:, None, :] < window)
+    o = _attend(q, k_ctx, v_ctx, mask, cfg.logit_softcap)
     o = o.astype(x.dtype).reshape(b, 1, -1)
     return dense(o, p["wo"]), new_cache
 
@@ -505,12 +611,12 @@ def _apply_moe_shard_map(cfg: ArchConfig, p: Tree, x: jax.Array,
             out = jax.lax.psum(out, "model")
         return out.reshape(bl, sl, -1)
 
-    fn = jax.shard_map(
+    from repro.models.common import shard_map_compat
+    fn = shard_map_compat(
         local, mesh=mesh,
         in_specs=(PS(None, None), wg_spec, wu_spec, wd_spec,
                   PS(baxes, None, None)),
-        out_specs=PS(baxes, None, None),
-        check_vma=False)
+        out_specs=PS(baxes, None, None))
     return fn(p["router"], p["wg"], p["wu"], p["wd"], x)
 
 

@@ -207,3 +207,49 @@ def init_caches(cfg: ArchConfig, par: Parallel, batch: int, max_seq: int,
     """Abstract decode-cache declaration (P tree) for all stages."""
     return tuple(T.init_stage_cache(cfg, par, s, batch, max_seq, enc_len)
                  for s in cfg.stages)
+
+
+# ---------------------------------------------------------------------------
+# Paged serving path (block-table addressed KV pages)
+# ---------------------------------------------------------------------------
+def init_paged_caches(cfg: ArchConfig, par: Parallel, n_slots: int,
+                      num_pages: int, page_size: int) -> Tree:
+    """Abstract paged-cache declaration: attention KV lives in a shared
+    (num_pages, page_size) pool per layer stack; recurrent state stays
+    per-slot.  Encoder–decoder archs keep static cross K/V per request
+    and are not paged (serve them on the contiguous path)."""
+    if cfg.enc_dec:
+        raise NotImplementedError("paged serving does not support enc-dec")
+    return tuple(T.init_stage_cache_paged(cfg, par, s, n_slots, num_pages,
+                                          page_size)
+                 for s in cfg.stages)
+
+
+def decode_step_paged(cfg: ArchConfig, par: Parallel, params: Tree,
+                      token: jax.Array, pos: jax.Array, caches: Tree,
+                      block_tables: jax.Array, max_seq: int):
+    """One paged decode step.  token/pos (B,) int32; block_tables
+    (B, nblk) int32 page ids (-1 = unassigned).  The KV gather/scatter
+    over page indices happens inside this (jitted) program."""
+    x = embed_tokens(cfg, params, token[:, None])
+    new_caches = []
+    for stage, sp, c in zip(cfg.stages, params["stages"], caches):
+        x, nc = T.stage_step_paged(cfg, par, stage, sp, x, pos, c,
+                                   block_tables, max_seq)
+        new_caches.append(nc)
+    logits = logits_fn(cfg, params, x)
+    return logits[:, 0], tuple(new_caches)
+
+
+def splice_prefill(cfg: ArchConfig, caches: Tree, cache1: Tree, slot):
+    """Contiguous splice: copy a batch-1 prefill cache into decode slot."""
+    return jax.tree.map(lambda c, c1: c.at[:, slot].set(c1[:, 0]),
+                        caches, cache1)
+
+
+def splice_prefill_paged(cfg: ArchConfig, caches: Tree, cache1: Tree,
+                         slot, bt_row: jax.Array) -> Tree:
+    """Paged splice: scatter a batch-1 prefill cache into pool pages
+    (attention) / decode slot (recurrent state)."""
+    return tuple(T.stage_splice_paged(cfg, stage, cs, c1, slot, bt_row)
+                 for stage, cs, c1 in zip(cfg.stages, caches, cache1))

@@ -84,7 +84,7 @@ def _init_leaf(p: P, key) -> jax.Array:
 def materialize(tree, key) -> Any:
     """P tree -> concrete arrays.  Deterministic per-leaf key derivation
     (path-hash folded into the base key) so init is stable under tree edits."""
-    leaves = jax.tree.leaves_with_path(tree, is_leaf=is_leaf)
+    leaves = jax.tree_util.tree_leaves_with_path(tree, is_leaf=is_leaf)
     out = {}
     arrays = []
     for path, p in leaves:

@@ -292,6 +292,84 @@ def stage_step(cfg: ArchConfig, par: Parallel, stage: Stage, sparams: Tree,
 
 
 # ---------------------------------------------------------------------------
+# Paged decode: block-table addressed KV pages (serving runtime)
+# ---------------------------------------------------------------------------
+ATTN_KINDS = ("dense", "moe", "local")
+
+
+def block_step_paged(cfg: ArchConfig, par: Parallel, kind: str, p: Tree,
+                     x: jax.Array, pos: jax.Array, cache: Tree,
+                     block_tables: jax.Array, max_seq: int, layer: int):
+    """Paged variant of :func:`block_step` for attention blocks; recurrent
+    blocks carry O(1) per-slot state and keep the dense (unrolled) path."""
+    if kind in ATTN_KINDS:
+        w = _kind_window(cfg, kind, max_seq)
+        h, new_cache = L.attention_decode_paged(
+            cfg, par, p["attn"], L.apply_norm(cfg, p["ln1"], x), pos,
+            cache, block_tables, window=w, layer=layer)
+        x = x + h
+        z = L.apply_norm(cfg, p["ln2"], x)
+        h = L.apply_moe(cfg, p["mlp"], z, par) if kind == "moe" else \
+            L.apply_mlp(cfg, p["mlp"], z)
+        return hint_act(x + h, par), new_cache
+    return block_step(cfg, par, kind, p, x, pos, cache, max_seq, layer=layer)
+
+
+def stage_step_paged(cfg: ArchConfig, par: Parallel, stage: Stage,
+                     sparams: Tree, x: jax.Array, pos: jax.Array,
+                     caches: Tree, block_tables: jax.Array, max_seq: int):
+    """Always unrolled over layers: each layer's page writes are in-place
+    slot scatters addressed into the stacked pool; a scan would round-trip
+    the whole (L, P, ps, H, dh) pool through the carry every layer."""
+    cur = list(caches)
+    for layer in range(stage.repeats):
+        lp = jax.tree.map(lambda a: a[layer], sparams)
+        for i, kind in enumerate(stage.pattern):
+            x, cur[i] = block_step_paged(cfg, par, kind, lp[i], x, pos,
+                                         cur[i], block_tables, max_seq,
+                                         layer)
+    return x, tuple(cur)
+
+
+def stage_splice_paged(cfg: ArchConfig, stage: Stage, pool_stage: Tree,
+                       cache1_stage: Tree, slot, bt_row: jax.Array) -> Tree:
+    """Splice one request's prefill caches into the paged pools.
+
+    Attention caches scatter by absolute token position into the pages of
+    ``bt_row``; recurrent states splice into decode-batch slot ``slot``
+    exactly as the contiguous path does."""
+    out = []
+    for i, kind in enumerate(stage.pattern):
+        pool_i, c1 = pool_stage[i], cache1_stage[i]
+        if kind in ATTN_KINDS:
+            out.append(L.scatter_pages(pool_i, c1["k"][:, 0], c1["v"][:, 0],
+                                       c1["p"][0, 0], bt_row))
+        else:
+            out.append(jax.tree.map(
+                lambda full, new: full.at[:, slot].set(new[:, 0]),
+                pool_i, c1))
+    return tuple(out)
+
+
+def init_stage_cache_paged(cfg: ArchConfig, par: Parallel, stage: Stage,
+                           n_slots: int, num_pages: int,
+                           page_size: int) -> Tree:
+    """Paged mirror of :func:`init_stage_cache`: attention blocks share
+    the (num_pages, page_size) pool; recurrent blocks keep per-slot
+    state at the decode batch size."""
+    per_pos = []
+    for kind in stage.pattern:
+        if kind in ATTN_KINDS:
+            c = L.make_paged_cache(cfg, par, num_pages, page_size,
+                                   stage.repeats)
+        else:
+            c = stack_p(R.init_recurrent_state(cfg, kind, n_slots),
+                        stage.repeats)
+        per_pos.append(c)
+    return tuple(per_pos)
+
+
+# ---------------------------------------------------------------------------
 # Decode-cache declarations (abstract P trees, mirror stage_prefill output)
 # ---------------------------------------------------------------------------
 def init_stage_cache(cfg: ArchConfig, par: Parallel, stage: Stage,

@@ -1,22 +1,34 @@
-"""Serving engine: batched prefill/decode with per-slot positions.
+"""Serving engine: batched prefill/decode over contiguous slots or paged KV.
 
 Continuous-batching slot model: a fixed decode batch of `n_slots`; each
-slot holds one request's cache region and an independent position counter
-(the decode step takes a (B,) position vector, so ragged progress is
-native).  New requests prefill (jitted, padded to `prefill_buckets`) and
-splice their cache into the slot; finished slots free immediately.
+slot holds one request's cache and an independent position counter (the
+decode step takes a (B,) position vector, so ragged progress is native).
+New requests prefill (jitted, padded to `prefill_buckets`) and splice
+their cache in; finished slots free immediately.
 
-Weights may be fp (bf16) or PTQ1.61-quantized (QLinear pytrees) — the
-same jitted step serves both, which is the point of the paper-integrated
-runtime: sub-2-bit weights cut the decode weight-traffic term ~10×
-(EXPERIMENTS.md §Roofline).
+Two cache backends behind one interface:
+
+  * **contiguous** (legacy): each slot owns a `max_seq`-sized ring-buffer
+    region — memory is `n_slots × max_seq` regardless of actual lengths.
+  * **paged**: all slots share one pool of fixed-size KV pages addressed
+    through per-request block tables (`repro.runtime.paged_cache`), with
+    the gather/scatter over page indices inside the jitted decode step.
+    Memory scales with resident tokens; when the pool runs dry the
+    scheduler preempts a victim and re-queues it.
+
+Admission/preemption policy lives in `repro.runtime.scheduler` (FCFS,
+deadlines, victim selection); serving counters in
+`repro.runtime.metrics`.  Weights may be fp (bf16) or PTQ1.61-quantized
+(QLinear pytrees) — the same jitted step serves both, which is the point
+of the paper-integrated runtime: sub-2-bit weights cut the decode
+weight-traffic term ~10× (EXPERIMENTS.md §Roofline), which is exactly
+why the KV cache, not the weights, becomes the serving bottleneck.
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import Any, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -25,7 +37,11 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.models import model as M
 from repro.models.common import Parallel
-from repro.models.param import abstractify, materialize
+from repro.models.param import materialize
+from repro.runtime.metrics import EngineMetrics
+from repro.runtime.paged_cache import (BlockTables, PagePool,
+                                       pages_for_tokens)
+from repro.runtime.scheduler import Scheduler
 
 Tree = Any
 
@@ -38,102 +54,368 @@ class Request:
     temperature: float = 0.0
     out_tokens: List[int] = field(default_factory=list)
     done: bool = False
+    expired: bool = False               # deadline passed while queued
+    preemptions: int = 0
+    deadline_t: Optional[float] = None  # absolute (scheduler clock)
+    admit_seq: int = 0                  # set by the scheduler on admit
+    prompt_cap: Optional[int] = None    # engine's max prefill length
+
+    def n_prompt_tokens(self) -> int:
+        """Tokens a (re-)prefill must cover: the prompt plus any tokens
+        already generated before a preemption (minus the pending one).
+
+        ``prompt_cap`` (the engine's decode ceiling, max_seq-1) is a
+        safety bound for admission page accounting; in practice it never
+        binds — fresh prompts are truncated below it at submit and a
+        resume seq stops at max_seq-2 because generation ends at
+        position max_seq-1 (`_start` asserts this)."""
+        n = len(self.prompt) + max(0, len(self.out_tokens) - 1)
+        return min(n, self.prompt_cap) if self.prompt_cap is not None else n
 
 
+# ---------------------------------------------------------------------------
+# Cache backends
+# ---------------------------------------------------------------------------
+class _ContiguousBackend:
+    """Legacy per-slot ring-buffer caches: (B, max_seq) regions."""
+
+    name = "contiguous"
+
+    def __init__(self, eng: "Engine"):
+        self.eng = eng
+        cache_decl = M.init_caches(eng.cfg, eng.par, eng.n_slots, eng.max_seq)
+        self.caches = materialize(cache_decl, jax.random.PRNGKey(0))
+        self._decode = jax.jit(functools.partial(
+            M.decode_step, eng.cfg, eng.par, max_seq=eng.max_seq))
+        self._splice = jax.jit(functools.partial(M.splice_prefill, eng.cfg))
+
+    def free_pages(self) -> Optional[int]:
+        return None                      # slots pre-reserve max_seq
+
+    def page_util(self) -> Optional[float]:
+        return None
+
+    def splice(self, slot: int, cache1: Tree, n_tokens: int) -> None:
+        self.caches = self._splice(self.caches, cache1,
+                                   jnp.int32(slot))
+
+    def ensure_capacity(self, slot: int, pos: int) -> bool:
+        return True                      # region covers max_seq by design
+
+    def release(self, slot: int) -> None:
+        pass                             # region is reused on next splice
+
+    def decode(self, params, toks, pos):
+        logits, self.caches = self._decode(params, toks, pos, self.caches)
+        return logits
+
+
+class _PagedBackend:
+    """Shared page pool + per-slot block tables (see paged_cache.py)."""
+
+    name = "paged"
+
+    def __init__(self, eng: "Engine", page_size: int, pool_pages: int):
+        self.eng = eng
+        max_blocks = pages_for_tokens(eng.max_seq, page_size)
+        self.pool = PagePool(pool_pages, page_size)
+        self.tables = BlockTables(self.pool, eng.n_slots, max_blocks)
+        cache_decl = M.init_paged_caches(eng.cfg, eng.par, eng.n_slots,
+                                         pool_pages, page_size)
+        self.caches = materialize(cache_decl, jax.random.PRNGKey(0))
+        self._decode = jax.jit(functools.partial(
+            M.decode_step_paged, eng.cfg, eng.par, max_seq=eng.max_seq))
+        self._splice = jax.jit(functools.partial(
+            M.splice_prefill_paged, eng.cfg))
+
+    @property
+    def page_size(self) -> int:
+        return self.pool.page_size
+
+    def free_pages(self) -> Optional[int]:
+        return self.pool.free_pages
+
+    def page_util(self) -> Optional[float]:
+        return self.pool.pages_in_use / self.pool.num_pages
+
+    def splice(self, slot: int, cache1: Tree, n_tokens: int) -> None:
+        ok = self.tables.ensure_blocks(
+            slot, pages_for_tokens(n_tokens, self.page_size))
+        assert ok, "admission must reserve prompt pages first"
+        bt_row = jnp.asarray(self.tables.as_array()[slot])
+        self.caches = self._splice(self.caches, cache1, jnp.int32(slot),
+                                   bt_row)
+
+    def ensure_capacity(self, slot: int, pos: int) -> bool:
+        return self.tables.ensure_for_position(slot, pos)
+
+    def release(self, slot: int) -> None:
+        self.tables.release(slot)
+
+    def decode(self, params, toks, pos):
+        bt = jnp.asarray(self.tables.as_array())
+        logits, self.caches = self._decode(params, toks, pos, self.caches,
+                                           bt)
+        return logits
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
 class Engine:
     def __init__(self, cfg: ArchConfig, par: Parallel, params: Tree,
                  *, n_slots: int = 4, max_seq: int = 512,
-                 prefill_buckets=(64, 256), seed: int = 0):
+                 prefill_buckets=(64, 256), seed: int = 0,
+                 paged: bool = False, page_size: int = 16,
+                 pool_pages: Optional[int] = None,
+                 scheduler: Optional[Scheduler] = None,
+                 metrics: Optional[EngineMetrics] = None):
         self.cfg, self.par, self.params = cfg, par, params
         self.n_slots, self.max_seq = n_slots, max_seq
         self.buckets = tuple(sorted(b for b in prefill_buckets
                                     if b <= max_seq)) or (max_seq,)
+        # a prefill of max_seq tokens would put the first decode write at
+        # position max_seq (past every cache layout) — cap prompts one short
+        self.max_prompt = min(self.buckets[-1], max_seq - 1)
         self.key = jax.random.PRNGKey(seed)
+        self.scheduler = scheduler or Scheduler()
+        self.metrics = metrics or EngineMetrics()
 
-        # batched decode cache (concrete zeros from the abstract decl)
-        cache_decl = M.init_caches(cfg, par, n_slots, max_seq)
-        self.caches = materialize(cache_decl, jax.random.PRNGKey(0))
         self.slot_req: List[Optional[Request]] = [None] * n_slots
         self.pos = np.zeros((n_slots,), np.int32)
         self.cur_tok = np.zeros((n_slots,), np.int32)
+        self.temps = np.zeros((n_slots,), np.float32)
 
-        self._decode = jax.jit(functools.partial(
-            M.decode_step, cfg, par, max_seq=max_seq))
+        if paged:
+            if page_size <= 0:
+                raise ValueError(f"page_size must be positive, got {page_size}")
+            if pool_pages is None:
+                pool_pages = n_slots * pages_for_tokens(max_seq, page_size)
+            self.backend = _PagedBackend(self, page_size, pool_pages)
+        else:
+            self.backend = _ContiguousBackend(self)
+
         self._prefill = jax.jit(functools.partial(
             M.prefill, cfg, par, max_seq=max_seq))
-        self._queue: List[Request] = []
+        self._sample = jax.jit(_sample_batched)
         self._rid = 0
 
     # ------------------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new: int = 32,
-               temperature: float = 0.0) -> Request:
+               temperature: float = 0.0,
+               deadline_s: Optional[float] = None) -> Request:
+        prompt = np.asarray(prompt, np.int32)
+        # prompts longer than the largest prefill bucket are left-truncated
+        # (keep the most recent tokens — standard serving behavior)
+        if len(prompt) > self.max_prompt:
+            prompt = prompt[-self.max_prompt:]
         self._rid += 1
-        r = Request(self._rid, np.asarray(prompt, np.int32), max_new,
-                    temperature)
-        self._queue.append(r)
+        deadline_t = (self.scheduler.clock() + deadline_s
+                      if deadline_s is not None else None)
+        # page-need cap for admission: resumes keep full context up to
+        # the decode ceiling (max_seq-1), not the fresh-prompt bucket cap
+        r = Request(self._rid, prompt, max_new, temperature,
+                    deadline_t=deadline_t, prompt_cap=self.max_seq - 1)
+        if max_new <= 0:                     # degenerate: nothing to do
+            r.done = True
+            self.metrics.on_submit(r.rid)
+            self.metrics.on_finish(r.rid)
+            return r
+        if isinstance(self.backend, _PagedBackend):
+            # max_new >= 1 here (degenerate requests returned above), so
+            # this bound covers admission's prompt+first-decode-page need
+            need = pages_for_tokens(
+                min(len(prompt) + max_new, self.max_seq),
+                self.backend.page_size)
+            if need > self.backend.pool.num_pages:
+                raise ValueError(
+                    f"request needs {need} pages but the pool only has "
+                    f"{self.backend.pool.num_pages}; grow --pool-pages")
+        self.scheduler.enqueue(r)
+        self.metrics.on_submit(r.rid)
         return r
 
     def _bucket(self, s: int) -> int:
         for b in self.buckets:
             if s <= b:
                 return b
-        return self.buckets[-1]
-
-    def _admit(self):
-        for slot in range(self.n_slots):
-            if self.slot_req[slot] is not None or not self._queue:
-                continue
-            r = self._queue.pop(0)
-            s = len(r.prompt)
-            b = self._bucket(s)
-            toks = np.full((1, b), 0, np.int32)
-            toks[0, -s:] = r.prompt                  # left-pad
-            positions = np.maximum(
-                np.arange(b, dtype=np.int32) - (b - s), 0)[None]
-            batch = {"tokens": jnp.asarray(toks),
-                     "positions": jnp.asarray(positions)}
-            logits, cache1 = self._prefill(self.params, batch)
-            # splice request cache (leading layer dims stay; batch dim = 1)
-            self.caches = jax.tree.map(
-                lambda c, c1: c.at[:, slot].set(c1[:, 0]), self.caches, cache1)
-            tok = self._sample(logits[:, -1], r)
-            r.out_tokens.append(int(tok))
-            self.slot_req[slot] = r
-            self.pos[slot] = s
-            self.cur_tok[slot] = int(tok)
-
-    def _sample(self, logits: jax.Array, r: Request) -> int:
-        if r.temperature <= 0:
-            return int(jnp.argmax(logits[-1] if logits.ndim > 1 else logits))
-        self.key, sub = jax.random.split(self.key)
-        lg = (logits[-1] if logits.ndim > 1 else logits) / r.temperature
-        return int(jax.random.categorical(sub, lg))
+        # implicit top bucket: fresh prompts are truncated to max_prompt
+        # ≤ buckets[-1] before this, so only preemption resumes land here
+        # (their seq can reach max_seq-2 and must keep full context/
+        # positions — one extra prefill compile, no truncation)
+        return self.max_seq
 
     # ------------------------------------------------------------------
-    def step(self):
-        """One batched decode tick across all active slots."""
+    def _start(self, slot: int, r: Request) -> None:
+        """(Re-)prefill `r` and occupy `slot`.
+
+        Fresh requests prefill their prompt and sample the first token
+        from the prefill logits.  Preempted requests prefill the prompt
+        plus their already-generated tokens (minus the pending one, which
+        is re-fed as the next decode input) so decoding continues where
+        it stopped.
+        """
+        resumed = bool(r.out_tokens)
+        seq = (np.concatenate([r.prompt,
+                               np.asarray(r.out_tokens[:-1], np.int32)])
+               if resumed else r.prompt)
+        # a resume seq is bounded by the decode ceiling (generation stops
+        # at pos max_seq-1), so the full context always fits a bucket
+        assert len(seq) <= self.max_seq - 1, (len(seq), self.max_seq)
+        s = len(seq)
+        b = self._bucket(s)
+        toks = np.full((1, b), 0, np.int32)
+        toks[0, -s:] = seq                       # left-pad
+        # pad positions are -1: masked out of attention and never written
+        # into KV storage (ring p=-1 / paged scatter drop)
+        idx = np.arange(b, dtype=np.int32)
+        positions = np.where(idx >= b - s, idx - (b - s), -1)[None]
+        batch = {"tokens": jnp.asarray(toks),
+                 "positions": jnp.asarray(positions)}
+        logits, cache1 = self._prefill(self.params, batch)
+        self.backend.splice(slot, cache1, s)
+        # this slot decodes at position s THIS tick, after the growth
+        # pass already ran — admission reserved the page (prompt+1)
+        ok = self.backend.ensure_capacity(slot, s)
+        assert ok, "admission must reserve the first decode page"
+        if resumed:
+            tok = r.out_tokens[-1]
+        else:
+            tok = int(self._sample(logits[:, -1].astype(jnp.float32),
+                                   self._next_key(),
+                                   jnp.asarray([r.temperature],
+                                               jnp.float32))[0])
+            r.out_tokens.append(tok)
+            self.metrics.on_token(r.rid)
+            if len(r.out_tokens) >= r.max_new:   # max_new=1: done at prefill
+                r.done = True
+                self.metrics.on_finish(r.rid)
+                self.backend.release(slot)
+                return
+        self.slot_req[slot] = r
+        self.pos[slot] = s
+        self.cur_tok[slot] = tok
+        self.temps[slot] = r.temperature
+
+    def _admit(self) -> None:
+        for r in self.scheduler.expire():
+            r.expired = True
+            r.done = True
+            self.metrics.on_expire(r.rid)
+        for slot in range(self.n_slots):
+            # while, not if: a max_new=1 request finishes AT prefill and
+            # leaves the slot free — keep admitting into it so a tick
+            # with an admissible queue never reports "nothing to do"
+            while self.slot_req[slot] is None:
+                r = self.scheduler.next_admissible(
+                    self.backend.free_pages(),
+                    getattr(self.backend, "page_size", 1))
+                if r is None:
+                    return
+                self.metrics.on_admit(r.rid)
+                self._start(slot, r)
+
+    # ------------------------------------------------------------------
+    def _preempt_for(self, slot: int) -> bool:
+        """Free pages by evicting a victim so `slot` can grow.  Returns
+        False when no victim exists (pool too small for this request)."""
+        running = {s: r for s, r in enumerate(self.slot_req)
+                   if r is not None}
+        victim = self.scheduler.choose_victim(running, exclude=slot)
+        if victim is None:
+            return False
+        r = self.slot_req[victim]
+        r.preemptions += 1
+        self.metrics.on_preempt(r.rid)
+        self.backend.release(victim)
+        self.slot_req[victim] = None
+        # front of the queue: the victim becomes the longest-waiting
+        # request and is re-admitted first (no preemption starvation)
+        self.scheduler.enqueue(r, front=True)
+        return True
+
+    def _grow_caches(self) -> None:
+        """Before a decode tick, every active slot needs storage for the
+        token it is about to write at `pos`.  On pool exhaustion, preempt
+        and retry; preempting may evict the very slot we were growing."""
+        for slot in range(self.n_slots):
+            while self.slot_req[slot] is not None and \
+                    not self.backend.ensure_capacity(slot, int(self.pos[slot])):
+                if not self._preempt_for(slot):
+                    raise RuntimeError(
+                        "page pool exhausted with no preemption victim; "
+                        "grow --pool-pages")
+
+    def _next_key(self):
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+    # ------------------------------------------------------------------
+    def step(self) -> bool:
+        """One batched decode tick across all active slots.
+
+        Growth runs BEFORE admission: if running slots need pages, any
+        preemption happens first, and only then is the freed capacity
+        offered to the queue — admitting first would make the fresh
+        request the newest (default victim) and throw away its entire
+        prefill in the same tick."""
+        self._grow_caches()
         self._admit()
         if all(r is None for r in self.slot_req):
             return False
+        self.metrics.on_tick(
+            self.scheduler.queue_depth,
+            sum(r is not None for r in self.slot_req),
+            self.backend.page_util())
         toks = jnp.asarray(self.cur_tok)
         pos = jnp.asarray(self.pos)
-        logits, self.caches = self._decode(self.params, toks, pos,
-                                           self.caches)
-        logits = np.asarray(logits.astype(jnp.float32))
+        logits = self.backend.decode(self.params, toks, pos)
+        # one vectorized device sample across all slots (no per-slot
+        # logits round-trips through numpy)
+        next_toks = np.asarray(self._sample(logits.astype(jnp.float32),
+                                            self._next_key(),
+                                            jnp.asarray(self.temps)))
         for slot, r in enumerate(self.slot_req):
             if r is None:
                 continue
-            tok = self._sample(jnp.asarray(logits[slot]), r)
+            tok = int(next_toks[slot])
             r.out_tokens.append(tok)
+            self.metrics.on_token(r.rid)
             self.pos[slot] += 1
             self.cur_tok[slot] = tok
-            if len(r.out_tokens) >= r.max_new or self.pos[slot] >= self.max_seq - 1:
+            if len(r.out_tokens) >= r.max_new or \
+                    self.pos[slot] >= self.max_seq - 1:
                 r.done = True
+                self.metrics.on_finish(r.rid)
+                self.backend.release(slot)
                 self.slot_req[slot] = None
         return True
 
     def run(self, max_ticks: int = 10_000) -> None:
         ticks = 0
-        while (self._queue or any(self.slot_req)) and ticks < max_ticks:
-            self.step()
+        while (len(self.scheduler) or any(r is not None
+                                          for r in self.slot_req)) \
+                and ticks < max_ticks:
+            if not self.step():
+                # nothing admissible and nothing running: only possible
+                # when queued work cannot fit yet — avoid spinning
+                if not any(r is not None for r in self.slot_req) and \
+                        len(self.scheduler):
+                    raise RuntimeError(
+                        "queued request can never be admitted "
+                        "(pool too small for its prompt)")
             ticks += 1
+
+
+def _sample_batched(logits: jax.Array, key, temps: jax.Array) -> jax.Array:
+    """Vectorized sampling for all slots in one device call.
+
+    logits (B,V) f32; temps (B,): <=0 means greedy.  Per-slot subkeys
+    keep slots independent; the greedy lane ignores the key entirely so
+    temperature-0 decoding is deterministic.
+    """
+    greedy = jnp.argmax(logits, axis=-1)
+    keys = jax.random.split(key, logits.shape[0])
+    scaled = logits / jnp.maximum(temps, 1e-6)[:, None]
+    sampled = jax.vmap(jax.random.categorical)(keys, scaled)
+    return jnp.where(temps > 0, sampled, greedy).astype(jnp.int32)

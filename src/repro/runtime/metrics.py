@@ -1,0 +1,135 @@
+"""Engine metrics: latency, throughput and occupancy counters.
+
+One :class:`EngineMetrics` instance rides along with an ``Engine``.  The
+engine reports lifecycle events (submit / admit / first token / finish /
+preempt / expire) and one gauge sample per decode tick; ``snapshot()``
+reduces them to the serving numbers that matter — tokens/s, time-to-first
+-token, queue depth, page utilization — and ``to_json()`` exports them
+for the benchmark harness (``benchmarks/serving_bench.py``).
+
+The clock is injectable so tests can drive deterministic time.
+"""
+from __future__ import annotations
+
+import json
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+
+def _percentile(xs: List[float], q: float) -> float:
+    if not xs:
+        return 0.0
+    ys = sorted(xs)
+    i = min(len(ys) - 1, int(q * (len(ys) - 1) + 0.5))
+    return ys[i]
+
+
+@dataclass
+class _ReqTimes:
+    submit_t: float
+    admit_t: Optional[float] = None
+    first_tok_t: Optional[float] = None
+    finish_t: Optional[float] = None
+    tokens: int = 0
+
+
+class EngineMetrics:
+    def __init__(self, clock: Callable[[], float] = time.monotonic):
+        self.clock = clock
+        self._req: Dict[int, _ReqTimes] = {}
+        self._expired: set = set()
+        self.preemptions = 0
+        self.expirations = 0
+        self.ticks = 0
+        self.prefills = 0
+        self._start_t: Optional[float] = None
+        self._last_t: Optional[float] = None
+        # per-tick gauge samples
+        self.queue_depth: List[int] = []
+        self.active_slots: List[int] = []
+        self.page_util: List[float] = []
+
+    # -- lifecycle events ----------------------------------------------
+    def on_submit(self, rid: int) -> None:
+        now = self.clock()
+        if self._start_t is None:
+            self._start_t = now
+        self._req[rid] = _ReqTimes(submit_t=now)
+
+    def on_admit(self, rid: int) -> None:
+        t = self._req[rid]
+        if t.admit_t is None:          # keep the first admit (preemptions re-admit)
+            t.admit_t = self.clock()
+        self.prefills += 1
+
+    def on_token(self, rid: int, n: int = 1) -> None:
+        now = self.clock()
+        self._last_t = now
+        t = self._req[rid]
+        if t.first_tok_t is None:
+            t.first_tok_t = now
+        t.tokens += n
+
+    def on_finish(self, rid: int) -> None:
+        self._req[rid].finish_t = self.clock()
+
+    def on_preempt(self, rid: int) -> None:
+        self.preemptions += 1
+
+    def on_expire(self, rid: int) -> None:
+        self.expirations += 1
+        self._expired.add(rid)      # never served: kept out of completed
+                                    # counts and latency percentiles
+
+    def on_tick(self, queue_depth: int, active_slots: int,
+                page_util: Optional[float] = None) -> None:
+        self.ticks += 1
+        self._last_t = self.clock()
+        self.queue_depth.append(queue_depth)
+        self.active_slots.append(active_slots)
+        if page_util is not None:
+            self.page_util.append(page_util)
+
+    # -- reduction ------------------------------------------------------
+    def snapshot(self) -> Dict:
+        served = {rid: t for rid, t in self._req.items()
+                  if rid not in self._expired}
+        ttft = [t.first_tok_t - t.submit_t for t in served.values()
+                if t.first_tok_t is not None]
+        lat = [t.finish_t - t.submit_t for t in served.values()
+               if t.finish_t is not None]
+        tokens = sum(t.tokens for t in self._req.values())
+        wall = ((self._last_t - self._start_t)
+                if self._start_t is not None and self._last_t is not None
+                else 0.0)
+        mean = lambda xs: sum(xs) / len(xs) if xs else 0.0
+        return {
+            "requests": len(self._req),
+            "completed": sum(1 for t in served.values()
+                             if t.finish_t is not None),
+            "generated_tokens": tokens,
+            "wall_s": wall,
+            "tokens_per_s": tokens / max(wall, 1e-9),
+            "ttft_mean_s": mean(ttft),
+            "ttft_p50_s": _percentile(ttft, 0.50),
+            "ttft_p95_s": _percentile(ttft, 0.95),
+            "latency_mean_s": mean(lat),
+            "latency_p95_s": _percentile(lat, 0.95),
+            "ticks": self.ticks,
+            "prefills": self.prefills,
+            "preemptions": self.preemptions,
+            "expirations": self.expirations,
+            "queue_depth_mean": mean(self.queue_depth),
+            "queue_depth_max": max(self.queue_depth, default=0),
+            "active_slots_mean": mean(self.active_slots),
+            "page_util_mean": mean(self.page_util),
+            "page_util_max": max(self.page_util, default=0.0),
+        }
+
+    def to_json(self, path: Optional[str] = None) -> str:
+        s = json.dumps(self.snapshot(), indent=2, default=float)
+        if path:
+            with open(path, "w") as f:
+                f.write(s)
+        return s

@@ -1,0 +1,158 @@
+"""Paged KV-cache block-pool allocator (host side).
+
+vLLM-style paging for the serving engine: the device KV cache is one
+shared pool of fixed-size pages ``(num_pages, page_size, heads, head_dim)``
+per attention layer stack, and each request owns a *block table* mapping
+its token blocks ``t // page_size`` to pool pages.  Memory then scales
+with the tokens actually resident instead of ``n_slots × max_seq``.
+
+The layout is position-aligned: token ``t`` of a request always lives at
+``(block_table[t // page_size], t % page_size)``, so the attention mask
+can be derived from implied positions (``block·page_size + slot``) and no
+per-slot position array has to be stored or cleared — a freed page can be
+handed to the next request without touching device memory, because stale
+slots are masked out by the new owner's shorter context.
+
+This module is pure host bookkeeping (free list + per-slot tables);
+the device-side gather/scatter lives in ``repro.models.layers``
+(:func:`attention_decode_paged`) and ``repro.models.transformer``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+def pages_for_tokens(n_tokens: int, page_size: int) -> int:
+    """Pages needed to hold ``n_tokens`` position-aligned tokens."""
+    return max(0, -(-int(n_tokens) // int(page_size)))
+
+
+@dataclass
+class PoolStats:
+    num_pages: int
+    pages_in_use: int
+    peak_in_use: int
+    allocs: int
+    alloc_failures: int
+
+    @property
+    def utilization(self) -> float:
+        return self.pages_in_use / max(1, self.num_pages)
+
+
+class PagePool:
+    """Fixed-size page allocator with free-list reuse.
+
+    Page ids are ``[0, num_pages)``; id ``num_pages`` is reserved as the
+    out-of-range sentinel the device scatter uses with ``mode="drop"``.
+    """
+
+    def __init__(self, num_pages: int, page_size: int):
+        if num_pages <= 0 or page_size <= 0:
+            raise ValueError(f"bad pool geometry {num_pages}x{page_size}")
+        self.num_pages = int(num_pages)
+        self.page_size = int(page_size)
+        # LIFO free list: recently freed pages are reused first (their
+        # pool lines are more likely to still be resident in HBM caches).
+        self._free: List[int] = list(range(num_pages - 1, -1, -1))
+        self._is_free = [True] * num_pages      # O(1) double-free guard
+        self._allocs = 0
+        self._failures = 0
+        self._peak = 0
+
+    # ------------------------------------------------------------------
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.num_pages - len(self._free)
+
+    def can_alloc(self, n: int) -> bool:
+        return len(self._free) >= n
+
+    def alloc(self, n: int = 1) -> Optional[List[int]]:
+        """Allocate ``n`` pages, or None (and no change) if unavailable."""
+        if n > len(self._free):
+            self._failures += 1
+            return None
+        out = [self._free.pop() for _ in range(n)]
+        for p in out:
+            self._is_free[p] = False
+        self._allocs += n
+        self._peak = max(self._peak, self.pages_in_use)
+        return out
+
+    def free(self, pages: List[int]) -> None:
+        for p in pages:
+            if not (0 <= p < self.num_pages):
+                raise ValueError(f"freeing invalid page {p}")
+            if self._is_free[p]:
+                raise ValueError(f"double free of page {p}")
+            self._is_free[p] = True
+            self._free.append(p)
+
+    def stats(self) -> PoolStats:
+        return PoolStats(self.num_pages, self.pages_in_use, self._peak,
+                         self._allocs, self._failures)
+
+
+class BlockTables:
+    """Per-slot block tables over a shared :class:`PagePool`.
+
+    ``table(slot)`` is an ``(max_blocks,)`` int32 row; unassigned blocks
+    are ``-1``.  The stacked ``(n_slots, max_blocks)`` array is what the
+    jitted decode step consumes each tick.
+    """
+
+    def __init__(self, pool: PagePool, n_slots: int, max_blocks: int):
+        self.pool = pool
+        self.n_slots = int(n_slots)
+        self.max_blocks = int(max_blocks)
+        self._tables = np.full((n_slots, max_blocks), -1, np.int32)
+        self._owned: Dict[int, List[int]] = {s: [] for s in range(n_slots)}
+
+    # ------------------------------------------------------------------
+    def as_array(self) -> np.ndarray:
+        return self._tables
+
+    def owned(self, slot: int) -> List[int]:
+        return list(self._owned[slot])
+
+    def n_blocks(self, slot: int) -> int:
+        return len(self._owned[slot])
+
+    def ensure_blocks(self, slot: int, n_blocks: int) -> bool:
+        """Grow ``slot``'s table to ``n_blocks`` blocks.  Returns False —
+        with no partial allocation — when the pool can't supply them."""
+        if n_blocks > self.max_blocks:
+            raise ValueError(
+                f"request needs {n_blocks} blocks > max_blocks={self.max_blocks}")
+        need = n_blocks - len(self._owned[slot])
+        if need <= 0:
+            return True
+        pages = self.pool.alloc(need)
+        if pages is None:
+            return False
+        start = len(self._owned[slot])
+        self._owned[slot].extend(pages)
+        self._tables[slot, start:start + len(pages)] = pages
+        return True
+
+    def ensure_for_position(self, slot: int, pos: int) -> bool:
+        """Make sure the page holding token position ``pos`` exists."""
+        return self.ensure_blocks(slot, pos // self.pool.page_size + 1)
+
+    def release(self, slot: int) -> int:
+        """Free every page owned by ``slot``; returns how many."""
+        pages = self._owned[slot]
+        n = len(pages)
+        if n:
+            self.pool.free(pages)
+        self._owned[slot] = []
+        self._tables[slot, :] = -1
+        return n

@@ -1,0 +1,123 @@
+"""Request scheduler: FCFS admission, preemption policy, deadlines.
+
+The scheduler owns the waiting queue and the *policy* decisions; the
+engine owns the slots, caches and device steps and asks the scheduler:
+
+  * ``next_admissible(...)`` — which queued request (if any) may start
+    now, given free pages.  Strict FCFS: if the head of the queue does
+    not fit, nothing is admitted (no reordering past the head, so a
+    large request cannot starve behind a stream of small ones).
+  * ``choose_victim(...)`` — which running request to preempt when the
+    page pool is exhausted mid-decode.  The victim's pages are freed and
+    the request is re-queued at the *front* (it becomes the
+    longest-waiting request and is re-admitted first, so preemption
+    cannot starve it).  Default victim policy is ``"newest"`` (most
+    recently admitted — least completed work lost, vLLM-style);
+    ``"oldest"`` is available for workloads where draining long-running
+    requests first is preferable.
+  * ``expire(...)`` — drop queued requests whose deadline passed while
+    waiting.  Running requests are never killed by a deadline; only
+    admission is gated (a request that started is cheapest to finish).
+
+Requests are duck-typed: anything with ``rid`` / ``deadline_t`` /
+``admit_seq`` attributes (see ``repro.runtime.engine.Request``).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional
+
+from repro.runtime.paged_cache import pages_for_tokens
+
+PREEMPT_POLICIES = ("newest", "oldest")
+
+
+@dataclass(frozen=True)
+class SchedulerConfig:
+    preempt_policy: str = "newest"
+
+    def __post_init__(self):
+        if self.preempt_policy not in PREEMPT_POLICIES:
+            raise ValueError(f"preempt_policy {self.preempt_policy!r} not in "
+                             f"{PREEMPT_POLICIES}")
+
+
+class Scheduler:
+    def __init__(self, cfg: SchedulerConfig = SchedulerConfig(),
+                 clock: Callable[[], float] = time.monotonic):
+        self.cfg = cfg
+        self.clock = clock
+        self._queue: List = []
+        self._admit_seq = 0
+
+    # ------------------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self._queue)
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self._queue)
+
+    def enqueue(self, req, front: bool = False) -> None:
+        if front:
+            self._queue.insert(0, req)
+        else:
+            self._queue.append(req)
+
+    def expire(self) -> List:
+        """Remove and return queued requests whose deadline has passed.
+
+        Only never-admitted requests (admit_seq == 0) expire: a
+        preempted request waiting for re-admission has already been paid
+        for (see the running-requests rule above) and keeps its place."""
+        now = self.clock()
+        dead = [r for r in self._queue
+                if getattr(r, "deadline_t", None) is not None
+                and r.deadline_t <= now
+                and getattr(r, "admit_seq", 0) == 0]
+        if dead:
+            gone = {id(r) for r in dead}
+            self._queue = [r for r in self._queue if id(r) not in gone]
+        return dead
+
+    def next_admissible(self, free_pages: Optional[int],
+                        page_size: int) -> Optional[object]:
+        """Pop and return the FCFS head if it fits, else None.
+
+        ``free_pages=None`` means the backend has no page budget
+        (contiguous slots reserve ``max_seq`` up front) — the head always
+        fits.  For the paged backend the head needs pages for its whole
+        prompt *plus the first decode token* (the engine writes it in the
+        same tick the request is admitted, after the growth pass already
+        ran); later decode pages are allocated lazily, block by block.
+        """
+        if not self._queue:
+            return None
+        head = self._queue[0]
+        if free_pages is not None:
+            need = pages_for_tokens(head.n_prompt_tokens() + 1, page_size)
+            if need > free_pages:
+                return None
+        self._queue.pop(0)
+        self._admit_seq += 1
+        head.admit_seq = self._admit_seq
+        return head
+
+    # ------------------------------------------------------------------
+    def choose_victim(self, running: Dict[int, object],
+                      exclude: Optional[int] = None) -> Optional[int]:
+        """Pick the slot to preempt when the pool is exhausted.
+
+        ``running`` maps slot -> request; ``exclude`` protects the slot
+        whose allocation triggered the preemption when other victims
+        exist (preempting yourself frees no net capacity for you)."""
+        cands = [(s, r) for s, r in running.items() if r is not None]
+        if exclude is not None and len(cands) > 1:
+            cands = [(s, r) for s, r in cands if s != exclude]
+        if not cands:
+            return None
+        newest = self.cfg.preempt_policy == "newest"
+        key = lambda sr: sr[1].admit_seq
+        slot, _ = (max if newest else min)(cands, key=key)
+        return slot

@@ -9,6 +9,7 @@ from jax.sharding import PartitionSpec as PS
 from repro.distributed.compression import (CompressionConfig, compress,
                                            init_residual)
 from repro.distributed.sharding import Rules
+from repro.launch.mesh import compat_make_mesh
 from repro.models.param import P
 
 
@@ -102,8 +103,7 @@ def test_pipeline_matches_sequential(rng):
 def test_pipeline_single_stage_oracle(rng):
     """n_stages=1 degenerate ring equals plain application."""
     from repro.distributed.pipeline import pipeline_apply
-    mesh = jax.make_mesh((1,), ("stage",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat_make_mesh((1,), ("stage",))
     w = jnp.asarray(rng.normal(size=(1, 8, 8)), jnp.float32)
     x = jnp.asarray(rng.normal(size=(3, 4, 8)), jnp.float32)
 
@@ -144,7 +144,10 @@ def test_hlo_flop_count_scan_vs_unroll():
     mod = H.module_analysis(c.as_text())
     expect = 2 * 32 * D * D * L * MB * 3       # fwd + dgrad + wgrad
     assert abs(mod["flops"] - expect) / expect < 0.05
-    xla = float(c.cost_analysis().get("flops", 0.0))
+    ca = c.cost_analysis()          # dict on new jax, [dict] on 0.4.x
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    xla = float(ca.get("flops", 0.0))
     assert xla < 0.5 * expect                  # XLA's known undercount
 
 

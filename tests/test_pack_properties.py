@@ -1,6 +1,9 @@
 """Hypothesis property tests for packing and quantization invariants."""
 import numpy as np
 import jax.numpy as jnp
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import binarize, int4, pack

@@ -1,0 +1,311 @@
+"""Paged serving runtime: allocator, scheduler, engine edge cases.
+
+Covers the acceptance surface of the paged KV subsystem: block-pool
+bookkeeping, FCFS admission order, paged-vs-contiguous greedy
+equivalence, prompts longer than the largest prefill bucket, and the
+pool-exhaustion → preemption → completion path.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import registry
+from repro.models import model as M
+from repro.models.common import Parallel
+from repro.runtime.engine import Engine, _sample_batched
+from repro.runtime.metrics import EngineMetrics
+from repro.runtime.paged_cache import (BlockTables, PagePool,
+                                       pages_for_tokens)
+from repro.runtime.scheduler import Scheduler, SchedulerConfig
+
+PAR = Parallel(remat=False, attn_chunk=32)
+
+
+@pytest.fixture(scope="module")
+def subject():
+    cfg = registry.get("tiny-lm").reduced()
+    params = M.init_params(cfg, PAR, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def make_engine(subject, *, paged, n_slots=2, max_seq=64, **kw):
+    cfg, params = subject
+    return Engine(cfg, PAR, params, n_slots=n_slots, max_seq=max_seq,
+                  prefill_buckets=(16, 32), paged=paged, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Allocator
+# ---------------------------------------------------------------------------
+def test_pages_for_tokens():
+    assert pages_for_tokens(0, 8) == 0
+    assert pages_for_tokens(1, 8) == 1
+    assert pages_for_tokens(8, 8) == 1
+    assert pages_for_tokens(9, 8) == 2
+
+
+def test_pool_alloc_free_reuse():
+    pool = PagePool(num_pages=4, page_size=8)
+    a = pool.alloc(3)
+    assert len(a) == 3 and pool.free_pages == 1
+    assert pool.alloc(2) is None            # no partial allocation
+    assert pool.free_pages == 1
+    pool.free(a[:2])
+    b = pool.alloc(3)
+    assert b is not None and pool.pages_in_use == 4
+    with pytest.raises(ValueError):
+        pool.free(a[:1] + a[:1])            # double free detected
+    st = pool.stats()
+    assert st.alloc_failures == 1 and st.peak_in_use == 4
+
+
+def test_block_tables_grow_and_release():
+    pool = PagePool(num_pages=6, page_size=8)
+    bt = BlockTables(pool, n_slots=2, max_blocks=4)
+    assert bt.ensure_for_position(0, 17)    # needs blocks 0..2
+    assert bt.n_blocks(0) == 3
+    row = bt.as_array()[0]
+    assert (row[:3] >= 0).all() and row[3] == -1
+    assert bt.ensure_blocks(1, 3)
+    assert not bt.ensure_blocks(0, 4)   # pool exhausted: refused...
+    assert bt.n_blocks(0) == 3          # ...with no partial allocation
+    assert bt.release(1) == 3
+    assert pool.free_pages == 3
+    assert (bt.as_array()[1] == -1).all()
+
+
+# ---------------------------------------------------------------------------
+# Scheduler policy
+# ---------------------------------------------------------------------------
+class _Req:
+    def __init__(self, rid, need_toks=8, deadline_t=None):
+        self.rid, self.deadline_t, self.admit_seq = rid, deadline_t, 0
+        self._need = need_toks
+
+    def n_prompt_tokens(self):
+        return self._need
+
+
+def test_scheduler_fcfs_head_of_line():
+    s = Scheduler()
+    s.enqueue(_Req(1, need_toks=100))       # head needs 13 pages
+    s.enqueue(_Req(2, need_toks=4))         # would fit, but FCFS: blocked
+    assert s.next_admissible(free_pages=2, page_size=8) is None
+    got = s.next_admissible(free_pages=None, page_size=8)
+    assert got.rid == 1                     # contiguous backend: always fits
+
+
+def test_scheduler_victim_policies():
+    reqs = {0: _Req(1), 1: _Req(2), 2: _Req(3)}
+    for slot, r in reqs.items():
+        r.admit_seq = slot + 1
+    s_new = Scheduler(SchedulerConfig(preempt_policy="newest"))
+    s_old = Scheduler(SchedulerConfig(preempt_policy="oldest"))
+    assert s_new.choose_victim(reqs) == 2
+    assert s_old.choose_victim(reqs) == 0
+    assert s_new.choose_victim(reqs, exclude=2) == 1
+    assert s_new.choose_victim({0: reqs[0]}, exclude=0) == 0  # self if alone
+
+
+def test_scheduler_deadlines():
+    t = [0.0]
+    s = Scheduler(clock=lambda: t[0])
+    s.enqueue(_Req(1, deadline_t=5.0))
+    s.enqueue(_Req(2))                      # no deadline
+    started = _Req(3, deadline_t=5.0)       # preempted mid-flight:
+    started.admit_seq = 1                   # already admitted once
+    s.enqueue(started, front=True)
+    t[0] = 10.0
+    dead = s.expire()
+    # only the never-admitted request expires; the preempted one keeps
+    # its place (work already paid for — see Scheduler.expire)
+    assert [r.rid for r in dead] == [1] and len(s) == 2
+
+
+# ---------------------------------------------------------------------------
+# Engine: paged vs contiguous equivalence and edge cases
+# ---------------------------------------------------------------------------
+def test_paged_matches_contiguous_greedy(subject):
+    """Temperature 0: same tokens from both backends, requests > slots.
+
+    Dedicated rng (not the shared session fixture): on an untrained
+    model, near-tied bf16 logits can flip argmax between the scan-based
+    contiguous decode and the unrolled paged decode for *some* prompt
+    sets; this seed is a verified tie-free workload, which is exactly
+    the regime the equivalence claim is about (see the analogous caveat
+    in test_runtime.test_engine_greedy_matches_decode_reference)."""
+    cfg, _ = subject
+    local = np.random.default_rng(0)
+    prompts = [local.integers(1, cfg.vocab, size=n).astype(np.int32)
+               for n in (4, 9, 13, 7, 21)]
+
+    def run(paged):
+        eng = make_engine(subject, paged=paged, page_size=8)
+        reqs = [eng.submit(p, max_new=6) for p in prompts]
+        eng.run()
+        assert all(r.done for r in reqs)
+        return [r.out_tokens for r in reqs]
+
+    assert run(False) == run(True)
+
+
+def test_queue_drain_order_fcfs(subject, rng):
+    """More requests than slots: admission follows submission order."""
+    cfg, _ = subject
+    eng = make_engine(subject, paged=True, n_slots=2, page_size=8)
+    reqs = [eng.submit(rng.integers(1, cfg.vocab, size=6).astype(np.int32),
+                       max_new=4) for _ in range(6)]
+    eng.run()
+    assert all(r.done for r in reqs)
+    seqs = [r.admit_seq for r in reqs]
+    assert seqs == sorted(seqs)             # FCFS: rid order == admit order
+    assert eng.metrics.snapshot()["queue_depth_max"] >= 1
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_prompt_longer_than_largest_bucket(subject, rng, paged):
+    """Prompts past the largest prefill bucket are left-truncated and
+    still decode to completion."""
+    cfg, _ = subject
+    eng = make_engine(subject, paged=paged, page_size=8)
+    long_prompt = rng.integers(1, cfg.vocab, size=50).astype(np.int32)
+    r = eng.submit(long_prompt, max_new=5)
+    assert len(r.prompt) == 32              # largest bucket
+    np.testing.assert_array_equal(r.prompt, long_prompt[-32:])
+    eng.run()
+    assert r.done and len(r.out_tokens) == 5
+
+
+def test_pool_exhaustion_preemption_completion(subject, rng):
+    """Tight pool: decode growth exhausts pages, a victim is preempted
+    and re-queued, and every request still completes."""
+    cfg, _ = subject
+    eng = make_engine(subject, paged=True, page_size=8, pool_pages=6)
+    reqs = [eng.submit(rng.integers(1, cfg.vocab, size=13).astype(np.int32),
+                       max_new=20) for _ in range(3)]
+    eng.run()
+    assert all(r.done for r in reqs)
+    assert all(len(r.out_tokens) == 20 for r in reqs)
+    snap = eng.metrics.snapshot()
+    assert snap["preemptions"] >= 1
+    assert sum(r.preemptions for r in reqs) == snap["preemptions"]
+    assert eng.backend.pool.pages_in_use == 0       # all pages returned
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_prompt_fills_whole_bucket(subject, rng, paged):
+    """A prompt as long as max_seq must not place the first decode write
+    at position max_seq (past every cache layout): prompts cap at
+    max_seq - 1 and the request still completes."""
+    cfg, params = subject
+    eng = Engine(cfg, PAR, params, n_slots=1, max_seq=32,
+                 prefill_buckets=(32,), paged=paged, page_size=8)
+    r = eng.submit(rng.integers(1, cfg.vocab, size=32).astype(np.int32),
+                   max_new=4)
+    assert len(r.prompt) == 31              # max_seq - 1
+    eng.run()
+    assert r.done and len(r.out_tokens) >= 1
+
+
+def test_resume_page_need_capped_by_prompt_cap():
+    """Admission gating must use the same truncation _start applies:
+    a long-generating preempted request's page need is capped."""
+    from repro.runtime.engine import Request
+    r = Request(1, np.arange(8, dtype=np.int32), prompt_cap=32,
+                out_tokens=list(range(60)))
+    assert r.n_prompt_tokens() == 32
+
+
+def test_submit_rejects_impossible_request(subject, rng):
+    cfg, _ = subject
+    eng = make_engine(subject, paged=True, page_size=8, pool_pages=2)
+    with pytest.raises(ValueError):
+        eng.submit(rng.integers(1, cfg.vocab, size=20).astype(np.int32),
+                   max_new=20)
+def test_max_new_limits_respected(subject, rng):
+    """max_new=0 completes with no tokens (never queued); max_new=1
+    finishes at prefill without entering decode (exactly one token)."""
+    cfg, _ = subject
+    eng = make_engine(subject, paged=True, page_size=8)
+    r0 = eng.submit(rng.integers(1, cfg.vocab, size=6).astype(np.int32),
+                    max_new=0)
+    r1 = eng.submit(rng.integers(1, cfg.vocab, size=6).astype(np.int32),
+                    max_new=1)
+    eng.run()
+    assert r0.done and r0.out_tokens == []
+    assert r1.done and len(r1.out_tokens) == 1
+    assert eng.backend.pool.pages_in_use == 0   # prefill pages released
+    # queue of instant-finishing requests beyond the slot count: each
+    # prefill leaves its slot free, so admission must keep draining the
+    # queue instead of reporting a stuck tick (regression: RuntimeError)
+    eng2 = make_engine(subject, paged=True, page_size=8)
+    more = [eng2.submit(rng.integers(1, cfg.vocab, size=6).astype(np.int32),
+                        max_new=1) for _ in range(5)]
+    eng2.run()
+    assert all(m.done and len(m.out_tokens) == 1 for m in more)
+
+
+def test_paged_matches_contiguous_hybrid_arch():
+    """Recurrent (rglru) + sliding-window (local) blocks through the
+    paged engine: recurrent state splices per-slot, windowed attention
+    masks stale pages — tokens must match the contiguous backend."""
+    cfg = registry.get("recurrentgemma-2b").reduced()
+    params = M.init_params(cfg, PAR, jax.random.PRNGKey(0))
+    local = np.random.default_rng(0)
+    prompts = [local.integers(1, cfg.vocab, size=n).astype(np.int32)
+               for n in (5, 11, 17)]
+
+    def run(paged):
+        eng = Engine(cfg, PAR, params, n_slots=2, max_seq=64,
+                     prefill_buckets=(16, 32), paged=paged, page_size=8)
+        reqs = [eng.submit(p, max_new=4) for p in prompts]
+        eng.run()
+        assert all(r.done for r in reqs)
+        return [r.out_tokens for r in reqs]
+
+    assert run(False) == run(True)
+
+
+def test_deadline_expires_queued_request(subject, rng):
+    cfg, _ = subject
+    eng = make_engine(subject, paged=False, n_slots=1)
+    a = eng.submit(rng.integers(1, cfg.vocab, size=8).astype(np.int32),
+                   max_new=20)
+    b = eng.submit(rng.integers(1, cfg.vocab, size=8).astype(np.int32),
+                   max_new=4, deadline_s=0.0)
+    eng.run()
+    assert a.done and not a.expired and len(a.out_tokens) == 20
+    assert b.expired and b.out_tokens == []
+    assert eng.metrics.snapshot()["expirations"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Vectorized sampling
+# ---------------------------------------------------------------------------
+def test_sample_batched_greedy_and_stochastic(rng):
+    logits = jnp.asarray(rng.normal(size=(4, 32)), jnp.float32)
+    key = jax.random.PRNGKey(0)
+    temps = jnp.asarray([0.0, 0.0, 1.0, 1.0], jnp.float32)
+    toks = np.asarray(_sample_batched(logits, key, temps))
+    ref = np.argmax(np.asarray(logits), axis=-1)
+    np.testing.assert_array_equal(toks[:2], ref[:2])    # greedy lanes
+    assert ((0 <= toks) & (toks < 32)).all()
+    # greedy lanes ignore the key entirely
+    toks2 = np.asarray(_sample_batched(logits, jax.random.PRNGKey(7), temps))
+    np.testing.assert_array_equal(toks[:2], toks2[:2])
+
+
+def test_paged_metrics_sanity(subject, rng):
+    cfg, _ = subject
+    clock = iter(np.arange(0.0, 1000.0, 0.5))
+    eng = make_engine(subject, paged=True, page_size=8,
+                      metrics=EngineMetrics(clock=lambda: next(clock)))
+    r = eng.submit(rng.integers(1, cfg.vocab, size=9).astype(np.int32),
+                   max_new=8)
+    eng.run()
+    snap = eng.metrics.snapshot()
+    assert r.done and snap["generated_tokens"] == 8
+    assert snap["ttft_mean_s"] > 0 and snap["tokens_per_s"] > 0
+    assert 0 < snap["page_util_max"] <= 1.0
+    assert snap["completed"] == 1

@@ -7,6 +7,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.configs import registry
+from repro.launch.mesh import compat_make_mesh
 from repro.models import layers as L
 from repro.models import recurrent as R
 from repro.models.common import Parallel
@@ -62,8 +63,7 @@ def test_moe_shard_map_matches_fallback():
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.normal(size=(2, 16, cfg.d_model)) * 0.3,
                     jnp.float32)
-    mesh = jax.make_mesh((2, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat_make_mesh((2, 2), ("data", "model"))
     par = Parallel(tp=2, dp=2, remat=False, attn_chunk=32)
 
     def loss(p, use_par):

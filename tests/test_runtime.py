@@ -143,11 +143,13 @@ def test_engine_greedy_matches_decode_reference(rng):
     eng.run()
 
     # reference: the same left-padded bucket prefill + decode_step loop
+    # (pad positions are -1 — masked out of attention, engine convention)
     b = 8  # bucket for a 7-token prompt
     toks = np.zeros((1, b), np.int32)
     toks[0, -len(prompt):] = prompt
-    positions = np.maximum(
-        np.arange(b, dtype=np.int32) - (b - len(prompt)), 0)[None]
+    idx = np.arange(b, dtype=np.int32)
+    positions = np.where(idx >= b - len(prompt),
+                         idx - (b - len(prompt)), -1)[None]
     logits, caches = M.prefill(cfg, PAR, params,
                                {"tokens": jnp.asarray(toks),
                                 "positions": jnp.asarray(positions)},
