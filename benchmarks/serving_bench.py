@@ -9,10 +9,23 @@ paged backend's footprint follows the resident tokens; a constrained
 pool row exercises the preemption path so the recovery cost is visible
 next to the full-parity numbers rather than hidden in a unit test.
 
+Per-phase step timing: every row carries the engine's own
+``phase_step_s`` breakdown (prefill vs decode wall time per jitted
+step; each compiled shape's first call is split out into
+"<phase>_compile", so the base series is pure steady-state), and a
+``fused`` paged row runs the same load with N-fused QKV/gate-up
+projections (``Engine(fuse_projections=True)``) so the decode fast
+path's win is recorded in the BENCH json next to the baseline.
+Phase timing stays enabled for EVERY row (its per-tick
+block_until_ready sync is part of what is measured), so tokens_per_s
+comparisons between rows are apples-to-apples; pass
+``Engine(time_phases=False)`` to serve without the instrumentation.
+
 Emits a BENCH json (results/bench/serving_bench.json).
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
@@ -39,10 +52,10 @@ def kv_bytes(cfg, *, paged: bool, pool_pages: int = 0) -> int:
 
 
 def bench_one(cfg, params, n_requests: int, *, paged: bool,
-              pool_pages=None, seed: int = 0) -> dict:
+              pool_pages=None, seed: int = 0, fused: bool = False) -> dict:
     eng = Engine(cfg, PAR, params, n_slots=N_SLOTS, max_seq=MAX_SEQ,
                  prefill_buckets=(16, 64), paged=paged, page_size=PAGE,
-                 pool_pages=pool_pages, seed=seed)
+                 pool_pages=pool_pages, seed=seed, fuse_projections=fused)
     rng = np.random.default_rng(seed)
     reqs = []
     for _ in range(n_requests):
@@ -53,10 +66,12 @@ def bench_one(cfg, params, n_requests: int, *, paged: bool,
     eng.run()
     wall = time.time() - t0
     snap = eng.metrics.snapshot()
+    phases = snap["phase_step_s"]
     pool = (pool_pages if pool_pages is not None
             else N_SLOTS * pages_for_tokens(MAX_SEQ, PAGE)) if paged else 0
     return {
-        "backend": eng.backend.name + ("(tight)" if pool_pages else ""),
+        "backend": eng.backend.name + ("(tight)" if pool_pages else "")
+        + ("(fused)" if fused else ""),
         "requests": n_requests,
         "all_done": all(r.done for r in reqs),
         "tokens_per_s": snap["generated_tokens"] / max(wall, 1e-9),
@@ -66,6 +81,11 @@ def bench_one(cfg, params, n_requests: int, *, paged: bool,
         "page_util_max": snap["page_util_max"],
         "preemptions": snap["preemptions"],
         "kv_mb_reserved": kv_bytes(cfg, paged=paged, pool_pages=pool) / 1e6,
+        "prefill_step_ms": phases.get("prefill", {}).get(
+            "mean_s", 0.0) * 1e3,
+        "decode_step_ms": phases.get("decode", {}).get(
+            "mean_s", 0.0) * 1e3,
+        "phase_step_s": phases,
     }
 
 
@@ -81,6 +101,7 @@ def run(quick: bool = False) -> dict:
     for n in loads:
         rows.append(bench_one(cfg, params, n, paged=False))
         rows.append(bench_one(cfg, params, n, paged=True))
+        rows.append(bench_one(cfg, params, n, paged=True, fused=True))
         rows.append(bench_one(cfg, params, n, paged=True,
                               pool_pages=tight))
     payload = {"n_slots": N_SLOTS, "max_seq": MAX_SEQ, "page_size": PAGE,
@@ -89,9 +110,13 @@ def run(quick: bool = False) -> dict:
     print(markdown_table(rows, ["backend", "requests", "tokens_per_s",
                                 "ttft_mean_s", "queue_depth_max",
                                 "page_util_max", "preemptions",
-                                "kv_mb_reserved"]))
+                                "kv_mb_reserved", "prefill_step_ms",
+                                "decode_step_ms"]))
     return payload
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced load sweep (CI budget)")
+    run(quick=ap.parse_args().quick)

@@ -72,6 +72,18 @@ def unpack_nibbles(packed: jax.Array, axis: int = -2,
     return stacked.reshape(out_shape).astype(dtype)
 
 
+def split_cols(a: jax.Array, splits) -> list:
+    """Split the trailing (N) axis into per-member slices.
+
+    Because both packed layouts keep N contiguous (K is the packed
+    axis), slicing ``w4``/``bits`` columns out of an N-fused matrix is
+    bit-exact — no unpack/repack round trip.  Works on any rank (scale
+    vectors (…, N) and packed matrices (…, K/8, N) alike).
+    """
+    idx = np.cumsum(np.asarray(splits))[:-1]
+    return jnp.split(a, [int(i) for i in idx], axis=-1)
+
+
 def packed_nbytes(k_salient: int, k_binary: int, n: int) -> int:
     """Storage bytes for one quantized (K, N) matrix (weights only)."""
     return (k_binary // 8) * n + (k_salient // 2) * n

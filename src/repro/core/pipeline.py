@@ -31,7 +31,8 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.core import blockwise
 from repro.core.calibrate import collect_stats
-from repro.core.qlinear import QLinear, QuantConfig, quantize_linear
+from repro.core.qlinear import (QLinear, QLinearGroup, QuantConfig,
+                                quantize_linear)
 from repro.core.select import map_quantizable
 from repro.models import model as M
 from repro.models import transformer as T
@@ -48,13 +49,47 @@ def tree_stack(trees: List[Tree]) -> Tree:
     return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
 
 
+def _is_group(leaf) -> bool:
+    return isinstance(leaf, QLinearGroup)
+
+
+def _quantize_group_inners(tree: Tree, qcfg: QuantConfig,
+                           min_dim: int) -> Tree:
+    """Quantize the fused fp matrix inside each QLinearGroup (one shared
+    mask/permutation per group — the fused packed layout)."""
+    import dataclasses
+
+    def visit(leaf):
+        if _is_group(leaf) and isinstance(leaf.inner, jax.Array) \
+                and leaf.k >= min_dim:
+            return dataclasses.replace(
+                leaf, inner=quantize_linear(leaf.inner, None, qcfg))
+        return leaf
+
+    return jax.tree.map(visit, tree, is_leaf=_is_group)
+
+
 def quantize_params_data_free(params: Tree, qcfg: QuantConfig,
-                              min_dim: int = 64) -> Tree:
+                              min_dim: int = 64,
+                              fuse: bool = False) -> Tree:
     """Mask from |w| magnitude, analytic scales, no learning.  Works for
-    every architecture (incl. stacked layer/expert weights)."""
+    every architecture (incl. stacked layer/expert weights).
+
+    ``fuse=True`` first concatenates QKV and gate+up along N
+    (:func:`repro.models.transformer.fuse_params_for_decode`) and then
+    quantizes each fused matrix as ONE PTQ1.61 layout — shared
+    permutation, int4 scales and α_r2 — producing the packed layouts the
+    decode fast path streams with 2 kernel calls per block instead of 5.
+    """
+    if fuse:
+        params = T.fuse_params_for_decode(params)
+
     def q(_, w):
         return quantize_linear(w, None, qcfg)
-    return map_quantizable(params, q, min_dim=min_dim)
+    params = map_quantizable(params, q, min_dim=min_dim, is_leaf=_is_group)
+    if fuse:
+        params = _quantize_group_inners(params, qcfg, min_dim)
+    return params
 
 
 def _block_forward(cfg: ArchConfig, par: Parallel, kind: str):

@@ -14,6 +14,13 @@ Storage layout (per (K, N) linear, K = input dim):
 Forward (math identical to Eq. 9 + int4 dequant):
   y = x[.., perm_s] @ W4deq  +  ((x[.., perm_b] * α_r2) @ sign) * (α_s·α_r1)
 
+The packed arrays are PRE-PERMUTED: ``quantize_linear`` folds the
+salient-first permutation into ``w4``/``bits`` row order at quantization
+time, so the forward needs exactly ONE activation gather (``x[.., perm]``)
+and no weight-side reordering — ``__matmul_permuted__`` skips even that
+when the caller already holds salient-first activations (the kernel
+dispatcher and the N-fused group path below).
+
 Leading stack dims (scan layers L, experts E) are supported on all array
 fields; static metadata lives in pytree aux so stacked QLinears slice
 cleanly under `jax.lax.scan`.
@@ -21,6 +28,12 @@ cleanly under `jax.lax.scan`.
 The XLA path below dequantizes on the fly (what the dry-run lowers); on
 TPU the Pallas kernels in ``repro.kernels`` implement the same contraction
 streaming packed bytes HBM→VMEM (``use_kernel=True``).
+
+Decode N-fusion: :class:`QLinearGroup` stores several same-input
+projections (QKV, gate+up) as ONE quantized matrix concatenated along N,
+sharing a single permutation / int4 scale set / α_r2 — each transformer
+block then issues 2 packed matmuls instead of 5 and gathers the
+activation once per group instead of once per projection.
 """
 from __future__ import annotations
 
@@ -113,13 +126,18 @@ class QLinear:
         if self.use_kernel:
             from repro.kernels import ops
             return ops.mixed_matmul(x, self)
-        xp = jnp.take(x, self.perm, axis=-1)
+        return self.__matmul_permuted__(jnp.take(x, self.perm, axis=-1))
+
+    def __matmul_permuted__(self, xp: jax.Array) -> jax.Array:
+        """Forward over ALREADY salient-first-permuted activations —
+        the one-gather entry point shared by the XLA path, the kernel
+        dispatcher's fallback, and fused-group callers."""
         xs, xb = xp[..., : self.k_s], xp[..., self.k_s:]
-        y4 = jnp.einsum("...k,kn->...n", xs, self.dequant_salient(x.dtype))
-        sign = pack.unpack_bits(self.bits, axis=-2, dtype=x.dtype)
-        yb = jnp.einsum("...k,kn->...n", xb * self.alpha_r2.astype(x.dtype),
+        y4 = jnp.einsum("...k,kn->...n", xs, self.dequant_salient(xp.dtype))
+        sign = pack.unpack_bits(self.bits, axis=-2, dtype=xp.dtype)
+        yb = jnp.einsum("...k,kn->...n", xb * self.alpha_r2.astype(xp.dtype),
                         sign)
-        yb = yb * (self.alpha_s * self.alpha_r1).astype(x.dtype)
+        yb = yb * (self.alpha_s * self.alpha_r1).astype(xp.dtype)
         return y4 + yb
 
     def __expert_matmul__(self, x: jax.Array) -> jax.Array:
@@ -195,6 +213,105 @@ def quantize_linear(w: jax.Array, act_stat: Optional[jax.Array],
                 lead + outs[0][0][j].shape)
             for j in range(8))
     return QLinear(*fields, k_s=k_s, k=k, n=n, use_kernel=qcfg.use_kernel)
+
+
+# ---------------------------------------------------------------------------
+# N-fused projection groups (decode fast path)
+# ---------------------------------------------------------------------------
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class QLinearGroup:
+    """Several same-input projections fused along N into one weight.
+
+    ``inner`` is either a plain (…, K, ΣN_i) array (exact fp fusion —
+    concatenation changes no math) or a :class:`QLinear` quantized over
+    the CONCATENATED weight, so every member shares one salient-first
+    permutation, one (s4, z4) int4 scale set and one α_r2 — the
+    structural requirement that lets the fused forward gather the
+    activation once and issue one packed matmul for the whole group.
+
+    ``splits`` records each member's output width; :meth:`split_out`
+    recovers per-member outputs and :meth:`members` rebuilds unfused
+    per-member views (the equivalence oracle: slicing the packed arrays
+    along N is exact because pack layouts keep N contiguous).
+    """
+
+    inner: Any
+    splits: Tuple[int, ...] = dataclasses.field(metadata={"static": True})
+
+    def tree_flatten(self):
+        return (self.inner,), (self.splits,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], *aux)
+
+    # ---- shape helpers ------------------------------------------------
+    @property
+    def n(self) -> int:
+        return sum(self.splits)
+
+    @property
+    def k(self) -> int:
+        if isinstance(self.inner, QLinear):
+            return self.inner.k
+        return self.inner.shape[-2]
+
+    # ---- forward ------------------------------------------------------
+    def __matmul_x__(self, x: jax.Array) -> jax.Array:
+        """Fused forward: x (..., K) -> (..., ΣN_i) in one matmul (and,
+        for quantized inners, one activation gather)."""
+        if hasattr(self.inner, "__matmul_x__"):
+            return self.inner.__matmul_x__(x)
+        return jnp.einsum("...k,kn->...n", x, self.inner.astype(x.dtype))
+
+    def split_out(self, y: jax.Array) -> Tuple[jax.Array, ...]:
+        """Slice a fused output back into per-member outputs."""
+        return tuple(pack.split_cols(y, self.splits))
+
+    def forward_split(self, x: jax.Array) -> Tuple[jax.Array, ...]:
+        return self.split_out(self.__matmul_x__(x))
+
+    # ---- oracle -------------------------------------------------------
+    def members(self) -> Tuple[Any, ...]:
+        """Per-member unfused views over the SAME quantized (or fp)
+        data — the bit-equivalence oracle for the fused path."""
+        if not isinstance(self.inner, QLinear):
+            return tuple(pack.split_cols(self.inner, self.splits))
+        q = self.inner
+        out = []
+        for w4, bits, a_s, a_r1, ni in zip(
+                pack.split_cols(q.w4, self.splits),
+                pack.split_cols(q.bits, self.splits),
+                pack.split_cols(q.alpha_s, self.splits),
+                pack.split_cols(q.alpha_r1, self.splits),
+                self.splits):
+            out.append(QLinear(q.perm, w4, q.s4, q.z4, bits, a_s, a_r1,
+                               q.alpha_r2, k_s=q.k_s, k=q.k, n=ni,
+                               use_kernel=q.use_kernel))
+        return tuple(out)
+
+    def packed_bytes(self) -> int:
+        if isinstance(self.inner, QLinear):
+            return self.inner.packed_bytes()
+        return self.inner.size * self.inner.dtype.itemsize
+
+
+def quantize_linear_group(ws, act_stat: Optional[jax.Array],
+                          qcfg: QuantConfig) -> QLinearGroup:
+    """PTQ1.61-quantize a list of same-K weights as ONE fused layout.
+
+    The members are concatenated along N before masking/quantization, so
+    the salient-channel mask (driven by the SHARED input activations)
+    and all K-side parameters are common to the group — exactly the
+    pre-permuted packed layout the fused decode kernel streams.
+    """
+    ks = {w.shape[-2] for w in ws}
+    if len(ks) != 1:
+        raise ValueError(f"fused members must share K, got {sorted(ks)}")
+    splits = tuple(int(w.shape[-1]) for w in ws)
+    fused = jnp.concatenate(list(ws), axis=-1)
+    return QLinearGroup(quantize_linear(fused, act_stat, qcfg), splits)
 
 
 def scale_params(q: QLinear) -> Tree:

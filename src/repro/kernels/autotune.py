@@ -1,0 +1,213 @@
+"""Block-size autotuner for the packed-weight Pallas kernels.
+
+The kernels' original hard-coded defaults (bm=256, bn=512, bk=128/256)
+were tuned for calibration-shaped GEMMs (M≈256).  Decode runs the same
+kernels at M = n_slots (1–16): a 256-row M block is meaningless there,
+and a 512-column N block forces ``N/512`` re-reads of the (M, K)
+activation tile that at decode shapes could sit in VMEM whole.  This
+module replaces the constants with a small static cost model:
+
+* **feasibility** — every block dim must divide its array dim (the
+  kernels have no remainder handling), ``bn`` must keep the 128-lane
+  alignment, and ``bk`` must be a *common* divisor of the int4 and
+  binary K spans (a multiple of 8 so packed bytes split evenly);
+* **VMEM budget** — double-buffered input tiles plus the f32
+  accumulator must fit ``vmem_budget`` (default 8 MiB of the ~16 MiB
+  v5e VMEM, leaving room for Pallas' own pipelining);
+* **HBM bytes per call** — weight bytes stream once per M tile,
+  activation bytes once per N tile, so the model prefers the largest
+  feasible ``bm``/``bn`` (for decode M this collapses to ``bm=M`` and,
+  VMEM permitting, ``bn=N`` — one x read per call);
+* **modeled time** — ``max(flops/PEAK_FLOPS, bytes/HBM_BW)`` with the
+  v5e constants from ``repro.launch.hlo_analysis`` (the same numbers
+  the roofline report uses).
+
+``choose_blocks`` is memoized (the dispatch cache): one search per
+distinct ``(M, k_s, k_b, N)``, O(1) afterwards — decode calls the same
+handful of shapes millions of times.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+from repro.launch.hlo_analysis import HBM_BW, PEAK_FLOPS
+
+# Input tiles are double-buffered by the Pallas pipeline; keep their two
+# copies plus the resident f32 accumulator inside half of VMEM.
+VMEM_BUDGET = 8 * 1024 * 1024
+BM_CAP = 256          # MXU saturates at 128 rows; 256 amortizes setup
+BK_CAP = 512
+BN_CAP = 32768
+
+
+@dataclass(frozen=True)
+class BlockChoice:
+    """One (bm, bn, bk) pick plus the cost-model terms behind it."""
+    bm: int
+    bn: int
+    bk: int
+    vmem_bytes: int
+    hbm_bytes: int
+    time_s: float
+
+
+def _divisors(n: int, cap: int) -> Tuple[int, ...]:
+    """Divisors of ``n`` that are ≤ cap, descending."""
+    if n <= 0:
+        return ()
+    out = [d for d in range(1, int(math.isqrt(n)) + 1) if n % d == 0]
+    out += [n // d for d in reversed(out) if n // d not in out]
+    return tuple(sorted((d for d in out if d <= cap), reverse=True))
+
+
+def common_bk(k_s: int, k_b: int, cap: Optional[int] = None,
+              align: int = 8) -> Optional[int]:
+    """Largest multiple-of-``align`` K block that divides BOTH the int4
+    span ``k_s`` and the binary span ``k_b`` (an empty span constrains
+    nothing).  Returns None when no such block exists — the caller must
+    fall back to the XLA path rather than assert inside the kernel."""
+    if cap is None:
+        cap = BK_CAP
+    g = math.gcd(max(k_s, 0), max(k_b, 0))
+    if g == 0:
+        return None
+    for d in _divisors(g, cap):
+        if d % align == 0:
+            return d
+    return None
+
+
+def resolve_blocks(m: int, k_s: int, k_b: int, n: int,
+                   bm: Optional[int], bn: Optional[int], bk: Optional[int],
+                   *, align: int = 8,
+                   bk_default: int = 256) -> Tuple[int, int, Optional[int]]:
+    """Shared block-dim resolution for all three packed kernels.
+
+    Missing dims come from the autotuner (legacy MXU constants when no
+    feasible choice exists); explicit dims are clamped to the array and
+    a ``bk`` that fails to divide a K span is repaired to the largest
+    common divisor at or below it (multiple of ``align``).  Returns
+    ``bk=None`` when no feasible K block exists — callers raise their
+    kernel-specific error.
+    """
+    choice = choose_blocks(m, k_s, k_b, n)
+    if bm is None:
+        bm = choice.bm if choice else min(BM_CAP, m)
+    if bn is None:
+        bn = choice.bn if choice else min(512, n)
+    if bk is None:
+        bk = choice.bk if choice else bk_default
+    bm, bn = min(bm, m), min(bn, n)
+    bk = min((bk,) + tuple(s for s in (k_s, k_b) if s))
+    if any(s % bk for s in (k_s, k_b) if s):
+        bk = common_bk(k_s, k_b, cap=bk, align=align)
+    return bm, bn, bk
+
+
+def kernel_vmem_bytes(bm: int, bn: int, bk: int) -> int:
+    """Per-step VMEM footprint of the mixed kernel: double-buffered
+    input tiles (x bf16, packed nibbles + bits, f32 scale vectors) plus
+    the revisited f32 accumulator tile."""
+    inputs = (bm * bk * 2            # x tile, bf16
+              + (bk // 2) * bn       # w4 tile, u8
+              + (bk // 8) * bn       # bits tile, u8
+              + 3 * bk * 4           # s4 / z4 / alpha_in slices
+              + bn * 4)              # alpha_out slice
+    return 2 * inputs + bm * bn * 4
+
+
+def weight_bytes(k_s: int, k_b: int, n: int) -> int:
+    """Packed weight bytes one call must stream (nibbles + sign bits)."""
+    return (k_s // 2) * n + (k_b // 8) * n
+
+
+def vector_bytes(k_s: int, k_b: int, n: int) -> int:
+    """f32 side-band vectors: s4+z4 (k_s each), alpha_in (k_b),
+    alpha_out (n)."""
+    return (2 * k_s + k_b + n) * 4
+
+
+def modeled_hbm_bytes(m: int, k_s: int, k_b: int, n: int,
+                      bm: int, bn: int) -> int:
+    """HBM bytes per kernel call under the chosen tiling: each weight
+    byte streams once per M tile, the bf16 activation once per N tile,
+    vectors once, and the output writes once (f32 accumulator)."""
+    k = k_s + k_b
+    return (weight_bytes(k_s, k_b, n) * _cdiv(m, bm)
+            + m * k * 2 * _cdiv(n, bn)
+            + vector_bytes(k_s, k_b, n)
+            + m * n * 4)
+
+
+def _cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def modeled_time_s(m: int, k: int, n: int, hbm_bytes: int) -> float:
+    return max(2.0 * m * k * n / PEAK_FLOPS, hbm_bytes / HBM_BW)
+
+
+def choose_blocks(m: int, k_s: int, k_b: int, n: int,
+                  vmem_budget: Optional[int] = None) -> Optional[BlockChoice]:
+    """Pick (bm, bn, bk) for one mixed/int4/binary matmul call.
+
+    Pass ``k_s=0`` for a pure-binary layout or ``k_b=0`` for pure int4.
+    Returns None when no feasible tiling exists (misaligned N, no common
+    K block, or a degenerate shape) — callers fall back to XLA.
+
+    The memoization IS the dispatch cache: serving decodes hit the same
+    few (M, k_s, k_b, N) keys every step.  The module-level knobs
+    (``VMEM_BUDGET``, ``BM_CAP``/``BK_CAP``/``BN_CAP``) are read here at
+    call time and are part of the cache key, so reassigning them takes
+    effect immediately — including for already-seen shapes.
+    """
+    return _choose_blocks_cached(
+        m, k_s, k_b, n,
+        VMEM_BUDGET if vmem_budget is None else vmem_budget,
+        BM_CAP, BK_CAP, BN_CAP)
+
+
+@functools.lru_cache(maxsize=4096)
+def _choose_blocks_cached(m: int, k_s: int, k_b: int, n: int,
+                          vmem_budget: int, bm_cap: int, bk_cap: int,
+                          bn_cap: int) -> Optional[BlockChoice]:
+    if m <= 0 or n <= 0 or k_s + k_b <= 0:
+        return None
+    if n % 128 != 0:
+        return None
+    bk0 = common_bk(k_s, k_b, cap=bk_cap)
+    if bk0 is None:
+        return None
+    k = k_s + k_b
+    bks = tuple(d for d in _divisors(bk0, bk_cap) if d % 8 == 0)
+    bns = tuple(d for d in _divisors(n, bn_cap) if d % 128 == 0)
+    bms = _divisors(m, bm_cap) or (m,)
+    best: Optional[BlockChoice] = None
+    for bm in bms:
+        for bn in bns:
+            # feasibility of this (bm, bn) is monotone in bk: take the
+            # largest bk that fits, larger bk = fewer grid steps
+            for bk in bks:
+                vmem = kernel_vmem_bytes(bm, bn, bk)
+                if vmem > vmem_budget:
+                    continue
+                hbm = modeled_hbm_bytes(m, k_s, k_b, n, bm, bn)
+                cand = BlockChoice(bm, bn, bk, vmem, hbm,
+                                   modeled_time_s(m, k, n, hbm))
+                if (best is None or cand.hbm_bytes < best.hbm_bytes
+                        or (cand.hbm_bytes == best.hbm_bytes
+                            and cand.bk > best.bk)):
+                    best = cand
+                break
+    return best
+
+
+def cache_info():
+    return _choose_blocks_cached.cache_info()
+
+
+def cache_clear() -> None:
+    _choose_blocks_cached.cache_clear()

@@ -10,8 +10,9 @@ Tiling: grid (M/bm, N/bn, K/bk); K innermost for accumulation.
   x tile     (bm, bk)     bf16
   bits tile  (bk/8, bn)   u8     -> unpack -> (bk, bn) ±1 bf16
   acc        (bm, bn)     f32 in the output ref (revisited across K steps)
-Per-step VMEM: bm·bk·2 + bk·bn/8 + bk·bn·2 + bm·bn·4 ≈ 0.9 MiB at the
-default (256, 512, 256) — MXU-aligned (all dims multiples of 128).
+Block sizes default to the :mod:`repro.kernels.autotune` cost model
+(VMEM-budgeted, HBM-byte-minimizing per (M, K, N)); decode-shaped calls
+get bm=M and a whole-N column block so the activation streams once.
 """
 from __future__ import annotations
 
@@ -20,6 +21,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels import autotune
 
 
 def _unpack_bits_block(packed: jax.Array, bk: int, bn: int) -> jax.Array:
@@ -50,16 +53,23 @@ def _kernel(x_ref, bits_ref, a_in_ref, a_out_ref, o_ref, *, bk, bn):
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
 def binary_matmul(x: jax.Array, bits: jax.Array, alpha_out: jax.Array,
-                  alpha_in: jax.Array, *, bm: int = 256, bn: int = 512,
-                  bk: int = 256, interpret: bool = True) -> jax.Array:
-    """y (M,N) f32 = ((x·α_in) @ unpack(bits)) · α_out."""
+                  alpha_in: jax.Array, *, bm: int = None, bn: int = None,
+                  bk: int = None, interpret: bool = True) -> jax.Array:
+    """y (M,N) f32 = ((x·α_in) @ unpack(bits)) · α_out.
+
+    Block sizes default to the :mod:`repro.kernels.autotune` cost model
+    (decode-shaped M picks bm=M and, VMEM permitting, bn=N); explicit
+    values are clamped/repaired to feasible divisors.
+    """
     m, kdim = x.shape
     n = bits.shape[1]
-    assert bits.shape[0] * 8 == kdim
-    bm = min(bm, m)
-    bn = min(bn, n)
-    bk = min(bk, kdim)
-    assert m % bm == 0 and n % bn == 0 and kdim % bk == 0 and bk % 8 == 0
+    if bits.shape[0] * 8 != kdim:
+        raise ValueError(f"bits K span {bits.shape[0] * 8} != x K {kdim}")
+    bm, bn, bk = autotune.resolve_blocks(m, 0, kdim, n, bm, bn, bk)
+    if bk is None or m % bm or n % bn or kdim % bk or bk % 8:
+        raise ValueError(
+            f"infeasible binary blocks (bm,bn,bk)=({bm},{bn},{bk}) for "
+            f"(M,K,N)=({m},{kdim},{n})")
 
     grid = (m // bm, n // bn, kdim // bk)
     out = pl.pallas_call(

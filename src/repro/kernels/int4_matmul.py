@@ -15,6 +15,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import autotune
+
 
 def _unpack_nibbles_block(packed: jax.Array, bk: int, bn: int) -> jax.Array:
     """(bk//2, bn) u8 -> (bk, bn) f32 codes 0..15 (low nibble = even k)."""
@@ -41,13 +43,19 @@ def _kernel(x_ref, w4_ref, s_ref, z_ref, o_ref, *, bk, bn):
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
 def int4_matmul(x: jax.Array, w4: jax.Array, s4: jax.Array, z4: jax.Array,
-                *, bm: int = 256, bn: int = 512, bk: int = 256,
+                *, bm: int = None, bn: int = None, bk: int = None,
                 interpret: bool = True) -> jax.Array:
+    """Blocks default to the autotuner (see :mod:`repro.kernels.autotune`)."""
     m, kdim = x.shape
     n = w4.shape[1]
-    assert w4.shape[0] * 2 == kdim
-    bm, bn, bk = min(bm, m), min(bn, n), min(bk, kdim)
-    assert m % bm == 0 and n % bn == 0 and kdim % bk == 0 and bk % 2 == 0
+    if w4.shape[0] * 2 != kdim:
+        raise ValueError(f"w4 K span {w4.shape[0] * 2} != x K {kdim}")
+    bm, bn, bk = autotune.resolve_blocks(m, kdim, 0, n, bm, bn, bk,
+                                         align=2)
+    if bk is None or m % bm or n % bn or kdim % bk or bk % 2:
+        raise ValueError(
+            f"infeasible int4 blocks (bm,bn,bk)=({bm},{bn},{bk}) for "
+            f"(M,K,N)=({m},{kdim},{n})")
 
     grid = (m // bm, n // bn, kdim // bk)
     out = pl.pallas_call(

@@ -8,9 +8,12 @@ streams only its own packed bytes (no second kernel launch, no (M,N)
 re-read between the two halves — that is the fusion win over calling
 int4_matmul + binary_matmul).
 
-Requires k_s % bk == 0 and k_b % bk == 0 (QuantConfig.multiple guarantees
-it at production shapes; ops.mixed_matmul falls back to the XLA path
-otherwise).
+Requires a K block that divides BOTH k_s and k_b (QuantConfig.multiple
+guarantees one at production shapes); block sizes default to the
+:mod:`repro.kernels.autotune` cost model and a requested ``bk`` that
+only divides one span is repaired to the largest common divisor rather
+than asserting.  ops.mixed_matmul falls back to the XLA path before
+calling in when no feasible tiling exists.
 """
 from __future__ import annotations
 
@@ -20,6 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import autotune
 from repro.kernels.binary_matmul import _unpack_bits_block
 from repro.kernels.int4_matmul import _unpack_nibbles_block
 
@@ -53,18 +57,29 @@ def _kernel(x_ref, w4_ref, s_ref, z_ref, bits_ref, a_in_ref, a_out_ref,
                    static_argnames=("bm", "bn", "bk", "interpret"))
 def mixed_matmul(x: jax.Array, w4: jax.Array, s4: jax.Array, z4: jax.Array,
                  bits: jax.Array, alpha_out: jax.Array, alpha_in: jax.Array,
-                 *, bm: int = 256, bn: int = 512, bk: int = 128,
+                 *, bm: int = None, bn: int = None, bk: int = None,
                  interpret: bool = True) -> jax.Array:
-    """x (M,K) permuted salient-first; returns (M,N) in x.dtype."""
+    """x (M,K) permuted salient-first; returns (M,N) in x.dtype.
+
+    ``bm``/``bn``/``bk`` default to the autotuner's pick for this
+    (M, k_s, k_b, N).  An explicit ``bk`` acts as a cap: the kernel uses
+    the largest common divisor of (k_s, k_b) at or below it — a bk that
+    divides only one span (e.g. k_s=128, k_b=192 with bk=128) is
+    repaired to 64 instead of tripping an assert mid-trace.
+    """
     m, kdim = x.shape
     n = bits.shape[1]
     k_s = w4.shape[0] * 2
     k_b = bits.shape[0] * 8
-    assert k_s + k_b == kdim, (k_s, k_b, kdim)
-    bm, bn = min(bm, m), min(bn, n)
-    bk = min(bk, k_s if k_s else bk, k_b if k_b else bk)
-    assert (m % bm == 0 and n % bn == 0 and k_s % bk == 0 and k_b % bk == 0
-            and bk % 8 == 0), (m, n, k_s, k_b, bk)
+    if k_s + k_b != kdim:
+        raise ValueError(f"k_s+k_b={k_s}+{k_b} != x K {kdim}")
+    bm, bn, bk = autotune.resolve_blocks(m, k_s, k_b, n, bm, bn, bk,
+                                         bk_default=128)
+    if bk is None or m % bm or n % bn or bk % 8:
+        raise ValueError(
+            f"infeasible mixed blocks (bm,bn,bk)=({bm},{bn},{bk}) for "
+            f"(M,k_s,k_b,N)=({m},{k_s},{k_b},{n}); route through "
+            f"repro.kernels.ops.mixed_matmul for the XLA fallback")
     k4_steps = k_s // bk
     kb_steps = k_b // bk
     grid = (m // bm, n // bn, k4_steps + kb_steps)

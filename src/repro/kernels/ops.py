@@ -3,12 +3,26 @@
 On CPU (this container) kernels run with ``interpret=True`` for
 correctness; on TPU set ``repro.kernels.ops.INTERPRET = False`` (the
 launcher does this when ``jax.default_backend() == 'tpu'``).
+
+Decode fast path notes (§Perf):
+
+* Feasibility is checked BEFORE the salient-first activation gather, so
+  an unaligned-shape call falls back to the XLA dequant path without
+  paying a dead (M, K) gather first.
+* Block sizes come from the :mod:`repro.kernels.autotune` cost model
+  (memoized per shape — the dispatch cache), not fixed constants: decode
+  calls at M = n_slots get M-sized row blocks and, VMEM permitting, a
+  whole-N column block so the activation streams HBM→VMEM once per call.
+* ``pre_permuted=True`` skips the gather entirely for callers that
+  already hold salient-first activations — the N-fused QLinearGroup path
+  gathers once per group (QKV, gate+up) instead of once per projection.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import autotune
 from repro.kernels.binary_matmul import binary_matmul
 from repro.kernels.int4_matmul import int4_matmul
 from repro.kernels.mixed_matmul import mixed_matmul as _mixed
@@ -16,28 +30,45 @@ from repro.kernels.mixed_matmul import mixed_matmul as _mixed
 INTERPRET = jax.default_backend() != "tpu"
 
 
-def _block_ok(k_s: int, k_b: int, n: int, bk: int = 128) -> bool:
-    return (k_s % bk == 0) and (k_b % bk == 0) and (n % 128 == 0)
+def _kernel_choice(m: int, k_s: int, k_b: int, n: int):
+    """Autotuned blocks, or None when the kernel cannot serve the shape
+    (misaligned N, no common K block, or an empty int4/binary span —
+    the kernel's block specs need at least one step on each span)."""
+    if k_s <= 0 or k_b <= 0:
+        return None
+    return autotune.choose_blocks(m, k_s, k_b, n)
 
 
-def mixed_matmul(x: jax.Array, q) -> jax.Array:
+def mixed_matmul(x: jax.Array, q, *, pre_permuted: bool = False) -> jax.Array:
     """PTQ1.61 linear forward for a QLinear `q` (2-D weights).
 
-    Flattens batch dims, permutes channels salient-first, runs the fused
-    kernel; falls back to the XLA dequant path for unaligned shapes.
+    Flattens batch dims, checks kernel feasibility, THEN permutes
+    channels salient-first (one gather) and runs the fused kernel with
+    autotuned blocks; falls back to the XLA dequant path for unaligned
+    shapes.  With ``pre_permuted=True`` the caller asserts ``x`` is
+    already in salient-first channel order and no gather is issued on
+    either path.
     """
     lead = x.shape[:-1]
     k = x.shape[-1]
-    xp = jnp.take(x.reshape(-1, k), q.perm, axis=-1)
-    if not _block_ok(q.k_s, q.k_b, q.n):
+    m = 1
+    for d in lead:
+        m *= d
+    choice = _kernel_choice(m, q.k_s, q.k_b, q.n)
+    if choice is None:
+        if pre_permuted:
+            return q.__matmul_permuted__(x)
         import dataclasses
-        from repro.core.qlinear import QLinear
         return dataclasses.replace(q, use_kernel=False).__matmul_x__(x)
+    xf = x.reshape(-1, k)
+    xp = xf if pre_permuted else jnp.take(xf, q.perm, axis=-1)
     alpha_out = (q.alpha_s * q.alpha_r1).astype(jnp.float32)
     y = _mixed(xp.astype(jnp.bfloat16), q.w4, q.s4, q.z4, q.bits,
                alpha_out, q.alpha_r2.astype(jnp.float32),
+               bm=choice.bm, bn=choice.bn, bk=choice.bk,
                interpret=INTERPRET)
     return y.reshape(lead + (q.n,)).astype(x.dtype)
 
 
-__all__ = ["binary_matmul", "int4_matmul", "mixed_matmul", "INTERPRET"]
+__all__ = ["binary_matmul", "int4_matmul", "mixed_matmul", "INTERPRET",
+           "autotune"]

@@ -52,6 +52,9 @@ def run(args):
     if args.quantize == "none":
         qparams = params
     elif args.quantize == "calibrated":
+        if args.fused:
+            print("[warn] --fused ignored for calibrated quantization "
+                  "(per-projection QLinears cannot be fused post-hoc)")
         calib = [{"tokens": jnp.asarray(t)} for t, _ in
                  corpus.batches(1, args.calib_seq, args.calib_segments,
                                 split="calib")]
@@ -59,7 +62,8 @@ def run(args):
                                         min_dim=args.min_dim)
     else:  # data-free
         qparams = quantize_params_data_free(params, qcfg,
-                                            min_dim=args.min_dim)
+                                            min_dim=args.min_dim,
+                                            fuse=args.fused)
     t_quant = time.time() - t0
 
     if args.quantize != "none":
@@ -72,7 +76,8 @@ def run(args):
                     max_seq=args.max_seq,
                     prefill_buckets=(args.max_seq // 8, args.max_seq // 2),
                     paged=args.paged, page_size=args.page_size,
-                    pool_pages=args.pool_pages)
+                    pool_pages=args.pool_pages,
+                    fuse_projections=args.fused and args.quantize == "none")
 
     rng = np.random.default_rng(args.seed)
     reqs = []
@@ -113,6 +118,10 @@ def parse_args(argv=None):
                    choices=["none", "datafree", "calibrated"])
     p.add_argument("--kernel", action="store_true",
                    help="use the fused Pallas mixed_matmul path")
+    p.add_argument("--fused", action="store_true",
+                   help="N-fuse QKV / gate+up projections (decode fast "
+                        "path): fused packed layouts for data-free "
+                        "quantization, fp concat fusion for --quantize none")
     p.add_argument("--ratio", type=float, default=0.2)
     p.add_argument("--multiple", type=int, default=16)
     p.add_argument("--min-dim", type=int, default=32)

@@ -108,9 +108,19 @@ def _project_qkv(cfg: ArchConfig, par: Parallel, p: Tree, xq: jax.Array,
     hq = cfg.n_heads
     hkv = cfg.n_kv_heads
     hkv_run = par.kv_heads_run(hkv, hq)
-    q = dense(xq, p["wq"], p.get("bq"))
-    k = dense(xkv, p["wk"], p.get("bk"))
-    v = dense(xkv, p["wv"], p.get("bv"))
+    if "wqkv" in p and xq is xkv:
+        # decode fast path: one fused matmul (and, when quantized, one
+        # salient-channel gather) for all three projections
+        g = p["wqkv"]
+        q, k, v = g.split_out(dense(xq, g))
+        if "bq" in p:
+            q = q + p["bq"].astype(q.dtype)
+            k = k + p["bk"].astype(k.dtype)
+            v = v + p["bv"].astype(v.dtype)
+    else:
+        q = dense(xq, p["wq"], p.get("bq"))
+        k = dense(xkv, p["wk"], p.get("bk"))
+        v = dense(xkv, p["wv"], p.get("bv"))
     q = q.reshape(q.shape[:-1] + (hq, dh))
     k = k.reshape(k.shape[:-1] + (hkv, dh))
     v = v.reshape(v.shape[:-1] + (hkv, dh))
@@ -437,8 +447,14 @@ def _act(name: str, x: jax.Array) -> jax.Array:
 
 
 def apply_mlp(cfg: ArchConfig, p: Tree, x: jax.Array) -> jax.Array:
-    g = _act(cfg.act, dense(x, p["wg"]))
-    u = dense(x, p["wu"])
+    if "wgu" in p:
+        # decode fast path: fused gate+up (one matmul / one gather)
+        gu = p["wgu"]
+        g, u = gu.split_out(dense(x, gu))
+        g = _act(cfg.act, g)
+    else:
+        g = _act(cfg.act, dense(x, p["wg"]))
+        u = dense(x, p["wu"])
     return dense(g * u, p["wd"])
 
 

@@ -59,6 +59,83 @@ def stack_p(tree: Tree, n: int) -> Tree:
         lambda p: P((n,) + p.shape, ("layers",) + p.axes, p.init, p.dtype), tree)
 
 
+# ---------------------------------------------------------------------------
+# Decode fast path: N-fused projection layouts (QKV, gate+up)
+# ---------------------------------------------------------------------------
+def _fusable(d, names) -> bool:
+    return d is not None and all(isinstance(d.get(k), jax.Array)
+                                 for k in names)
+
+
+def fuse_block_params(p: Tree) -> Tree:
+    """Fuse one block's same-input projections along N for decode.
+
+    ``wq``/``wk``/``wv`` become one ``wqkv`` :class:`QLinearGroup` and a
+    dense MLP's ``wg``/``wu`` become ``wgu`` — each transformer block
+    then issues 2 projection matmuls instead of 5.  Concatenating fp
+    arrays is mathematically exact; already-quantized (QLinear) leaves
+    are left unfused because post-hoc fusion cannot reconcile their
+    per-projection permutations — quantize with
+    ``quantize_params_data_free(..., fuse=True)`` to get fused packed
+    layouts.  MoE expert weights (router present) and cross-attention
+    keep the per-projection path.
+    """
+    from repro.core.qlinear import QLinearGroup
+    p = dict(p)
+    attn = p.get("attn")
+    if _fusable(attn, ("wq", "wk", "wv")):
+        attn = dict(attn)
+        ws = [attn.pop(k) for k in ("wq", "wk", "wv")]
+        attn["wqkv"] = QLinearGroup(jnp.concatenate(ws, axis=-1),
+                                    tuple(int(w.shape[-1]) for w in ws))
+        p["attn"] = attn
+    mlp = p.get("mlp")
+    if mlp is not None and "router" not in mlp and _fusable(mlp, ("wg", "wu")):
+        mlp = dict(mlp)
+        ws = [mlp.pop(k) for k in ("wg", "wu")]
+        mlp["wgu"] = QLinearGroup(jnp.concatenate(ws, axis=-1),
+                                  tuple(int(w.shape[-1]) for w in ws))
+        p["mlp"] = mlp
+    return p
+
+
+def unfuse_block_params(p: Tree) -> Tree:
+    """Inverse of :func:`fuse_block_params`: rebuild per-projection
+    weights as unfused VIEWS over the same (fp or packed) data — the
+    oracle the fused path is tested against."""
+    p = dict(p)
+    attn = p.get("attn")
+    if attn is not None and "wqkv" in attn:
+        attn = dict(attn)
+        g = attn.pop("wqkv")
+        attn["wq"], attn["wk"], attn["wv"] = g.members()
+        p["attn"] = attn
+    mlp = p.get("mlp")
+    if mlp is not None and "wgu" in mlp:
+        mlp = dict(mlp)
+        g = mlp.pop("wgu")
+        mlp["wg"], mlp["wu"] = g.members()
+        p["mlp"] = mlp
+    return p
+
+
+def fuse_params_for_decode(params: Tree) -> Tree:
+    """Apply :func:`fuse_block_params` across every stage's (stacked)
+    block trees.  Stacked (L, K, N) leaves concatenate along N exactly
+    like 2-D ones, so the fused groups slice cleanly under scan."""
+    new = dict(params)
+    new["stages"] = [tuple(fuse_block_params(bp) for bp in sp)
+                     for sp in params["stages"]]
+    return new
+
+
+def unfuse_params_for_oracle(params: Tree) -> Tree:
+    new = dict(params)
+    new["stages"] = [tuple(unfuse_block_params(bp) for bp in sp)
+                     for sp in params["stages"]]
+    return new
+
+
 def init_stage(cfg: ArchConfig, par: Parallel, stage: Stage,
                cross: bool = False) -> Tuple[Tree, ...]:
     return tuple(stack_p(init_block(cfg, par, k, cross), stage.repeats)

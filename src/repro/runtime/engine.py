@@ -27,6 +27,7 @@ why the KV cache, not the weights, becomes the serving bottleneck.
 from __future__ import annotations
 
 import functools
+import time
 from dataclasses import dataclass, field
 from typing import Any, List, Optional
 
@@ -36,6 +37,7 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models import model as M
+from repro.models import transformer as T
 from repro.models.common import Parallel
 from repro.models.param import materialize
 from repro.runtime.metrics import EngineMetrics
@@ -169,7 +171,16 @@ class Engine:
                  paged: bool = False, page_size: int = 16,
                  pool_pages: Optional[int] = None,
                  scheduler: Optional[Scheduler] = None,
-                 metrics: Optional[EngineMetrics] = None):
+                 metrics: Optional[EngineMetrics] = None,
+                 fuse_projections: bool = False,
+                 time_phases: bool = True):
+        if fuse_projections:
+            # N-fuse QKV / gate+up so each block's decode step issues 2
+            # projection matmuls instead of 5 (exact for fp weights;
+            # QLinear leaves stay unfused here — quantize with
+            # quantize_params_data_free(fuse=True) for fused packed
+            # layouts).
+            params = T.fuse_params_for_decode(params)
         self.cfg, self.par, self.params = cfg, par, params
         self.n_slots, self.max_seq = n_slots, max_seq
         self.buckets = tuple(sorted(b for b in prefill_buckets
@@ -199,6 +210,30 @@ class Engine:
             M.prefill, cfg, par, max_seq=max_seq))
         self._sample = jax.jit(_sample_batched)
         self._rid = 0
+        # per-phase timing: each jitted shape's FIRST call includes the
+        # XLA compile and is recorded under "<phase>_compile" so the
+        # "prefill"/"decode" series are pure steady-state step times.
+        # ``time_phases=False`` drops the block_until_ready sync on the
+        # decode hot path entirely (on an accelerator it costs one extra
+        # host-device round trip per generated token).
+        self.time_phases = time_phases
+        self._warm_shapes: set = set()
+
+    def _timed(self, phase: str, shape_key, fn):
+        """Run fn() and record its blocked wall time under ``phase`` (or
+        ``phase_compile`` for the first call at ``shape_key``)."""
+        if not self.time_phases:
+            return fn()
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(out)
+        dt = time.perf_counter() - t0
+        if (phase, shape_key) in self._warm_shapes:
+            self.metrics.on_phase_time(phase, dt)
+        else:
+            self._warm_shapes.add((phase, shape_key))
+            self.metrics.on_phase_time(phase + "_compile", dt)
+        return out
 
     # ------------------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new: int = 32,
@@ -272,7 +307,8 @@ class Engine:
         positions = np.where(idx >= b - s, idx - (b - s), -1)[None]
         batch = {"tokens": jnp.asarray(toks),
                  "positions": jnp.asarray(positions)}
-        logits, cache1 = self._prefill(self.params, batch)
+        logits, cache1 = self._timed(
+            "prefill", b, lambda: self._prefill(self.params, batch))
         self.backend.splice(slot, cache1, s)
         # this slot decodes at position s THIS tick, after the growth
         # pass already ran — admission reserved the page (prompt+1)
@@ -369,7 +405,9 @@ class Engine:
             self.backend.page_util())
         toks = jnp.asarray(self.cur_tok)
         pos = jnp.asarray(self.pos)
-        logits = self.backend.decode(self.params, toks, pos)
+        logits = self._timed(
+            "decode", self.backend.name,
+            lambda: self.backend.decode(self.params, toks, pos))
         # one vectorized device sample across all slots (no per-slot
         # logits round-trips through numpy)
         next_toks = np.asarray(self._sample(logits.astype(jnp.float32),

@@ -49,6 +49,9 @@ class EngineMetrics:
         self.queue_depth: List[int] = []
         self.active_slots: List[int] = []
         self.page_util: List[float] = []
+        # per-phase device-step wall times (engine reports blocked-on
+        # -result durations around each jitted prefill / decode call)
+        self.phase_times: Dict[str, List[float]] = {}
 
     # -- lifecycle events ----------------------------------------------
     def on_submit(self, rid: int) -> None:
@@ -81,6 +84,15 @@ class EngineMetrics:
         self.expirations += 1
         self._expired.add(rid)      # never served: kept out of completed
                                     # counts and latency percentiles
+
+    def on_phase_time(self, phase: str, seconds: float) -> None:
+        """Record one jitted step's wall time for ``phase``.  Decode runs
+        at M=n_slots while prefill runs at the bucket length, so the two
+        must be reported separately for the fused-projection /
+        autotuned-kernel win to be visible.  The engine routes each
+        compiled shape's first call to "<phase>_compile", keeping the
+        base series pure steady-state."""
+        self.phase_times.setdefault(phase, []).append(seconds)
 
     def on_tick(self, queue_depth: int, active_slots: int,
                 page_util: Optional[float] = None) -> None:
@@ -125,6 +137,15 @@ class EngineMetrics:
             "active_slots_mean": mean(self.active_slots),
             "page_util_mean": mean(self.page_util),
             "page_util_max": max(self.page_util, default=0.0),
+            "phase_step_s": {
+                phase: {
+                    "count": len(ts),
+                    "total_s": sum(ts),
+                    "mean_s": mean(ts),
+                    "p50_s": _percentile(ts, 0.50),
+                    "p95_s": _percentile(ts, 0.95),
+                } for phase, ts in sorted(self.phase_times.items())
+            },
         }
 
     def to_json(self, path: Optional[str] = None) -> str:

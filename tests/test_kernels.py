@@ -96,6 +96,95 @@ def test_mixed_matches_qlinear_forward(rng):
                                atol=0.06 * np.sqrt(k))
 
 
+def test_mixed_matmul_mismatched_k_spans(rng):
+    """k_s=128, k_b=192: no single bk ≤ 128 divides both spans at the old
+    default — the kernel must repair bk to the common divisor (64), not
+    assert mid-trace."""
+    m, k_s, k_b, n = 8, 128, 192, 128
+    k = k_s + k_b
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.bfloat16)
+    w4, s4, z4 = make_int4(rng, k_s, n)
+    bits, a_out, a_in = make_binary(rng, k_b, n)
+    y_ref = ref.mixed_matmul_ref(x, w4, s4, z4, bits, a_out, a_in)
+    for blocks in ({}, {"bk": 128}):       # autotuned and explicit-cap
+        y = mixed_matmul(x, w4, s4, z4, bits, a_out, a_in,
+                         interpret=True, **blocks)
+        np.testing.assert_allclose(y.astype(np.float32),
+                                   y_ref.astype(np.float32), **_tol(k, 2.0))
+
+
+# ---------------------------------------------------------------------------
+# Block-size autotuner
+# ---------------------------------------------------------------------------
+def test_autotune_common_bk():
+    from repro.kernels import autotune
+    assert autotune.common_bk(128, 192) == 64
+    assert autotune.common_bk(128, 136) == 8
+    assert autotune.common_bk(512, 512) == 512
+    assert autotune.common_bk(0, 384) == 384      # empty span: unconstrained
+    assert autotune.common_bk(768, 3328, cap=128) == 128
+    assert autotune.common_bk(24, 36) is None     # gcd 12: no ×8 divisor
+    assert autotune.common_bk(0, 0) is None
+
+
+@pytest.mark.parametrize("m,k_s,k_b,n", [
+    (1, 768, 3328, 12288),     # llama-7b fused QKV at decode batch 1
+    (4, 768, 3328, 22016),     # fused gate+up
+    (16, 128, 512, 384),
+    (256, 768, 3328, 4096),    # prefill-shaped
+])
+def test_autotune_choice_feasible(m, k_s, k_b, n):
+    from repro.kernels import autotune
+    c = autotune.choose_blocks(m, k_s, k_b, n)
+    assert c is not None
+    assert m % c.bm == 0 and n % c.bn == 0
+    assert k_s % c.bk == 0 and k_b % c.bk == 0 and c.bk % 8 == 0
+    assert c.vmem_bytes <= autotune.VMEM_BUDGET
+    # decode shapes must stream the activation once: whole-M row block
+    if m <= 16:
+        assert c.bm == m
+
+
+def test_autotune_decode_beats_legacy_blocks():
+    """The picked tiling must not model MORE traffic than the legacy
+    hard-coded (256, 512, 128) blocks on a decode shape."""
+    from repro.kernels import autotune
+    m, k_s, k_b, n = 4, 768, 3328, 12288
+    c = autotune.choose_blocks(m, k_s, k_b, n)
+    legacy = autotune.modeled_hbm_bytes(m, k_s, k_b, n,
+                                        bm=min(256, m), bn=min(512, n))
+    assert c.hbm_bytes <= legacy
+    # one x read per call at decode shapes (bn covers all of N)
+    assert c.bn == n
+
+
+def test_autotune_knobs_are_live():
+    """Reassigning the module knobs must take effect immediately, even
+    for shapes already in the dispatch cache (knobs are cache keys)."""
+    from repro.kernels import autotune
+    shape = (4, 768, 3328, 12288)
+    full = autotune.choose_blocks(*shape)
+    assert full.bn == 12288
+    old = autotune.BN_CAP
+    try:
+        autotune.BN_CAP = 512
+        capped = autotune.choose_blocks(*shape)
+        assert capped.bn <= 512
+    finally:
+        autotune.BN_CAP = old
+    assert autotune.choose_blocks(*shape).bn == 12288
+    # explicit budget overrides the module default
+    tight = autotune.choose_blocks(*shape, vmem_budget=1 << 20)
+    assert tight is None or tight.vmem_bytes <= 1 << 20
+
+
+def test_autotune_unfeasible_shapes():
+    from repro.kernels import autotune
+    assert autotune.choose_blocks(4, 128, 512, 200) is None   # N % 128
+    assert autotune.choose_blocks(4, 24, 36, 256) is None     # no common bk
+    assert autotune.choose_blocks(0, 128, 512, 256) is None
+
+
 def test_kernel_block_shape_sweep(rng):
     """Block-shape sweep: results must be block-size independent."""
     m, k, n = 128, 512, 256

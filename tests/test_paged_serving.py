@@ -150,6 +150,53 @@ def test_paged_matches_contiguous_greedy(subject):
     assert run(False) == run(True)
 
 
+@pytest.mark.parametrize("paged", [False, True])
+def test_engine_fused_projections_greedy_identical(subject, paged):
+    """Decode fast path acceptance: serving with N-fused QKV / gate+up
+    projections (Engine(fuse_projections=True)) must emit EXACTLY the
+    greedy tokens of the per-projection oracle engine — fp fusion is
+    pure concatenation, so any token drift is a fusion bug.  Uses the
+    same verified tie-free workload as the backend-equivalence test."""
+    cfg, _ = subject
+    local = np.random.default_rng(0)
+    prompts = [local.integers(1, cfg.vocab, size=n).astype(np.int32)
+               for n in (4, 9, 13, 7, 21)]
+
+    def run(fused):
+        eng = make_engine(subject, paged=paged, page_size=8,
+                          fuse_projections=fused)
+        if fused:
+            attn0 = eng.params["stages"][0][0]["attn"]
+            assert "wqkv" in attn0 and "wq" not in attn0
+        reqs = [eng.submit(p, max_new=6) for p in prompts]
+        eng.run()
+        assert all(r.done for r in reqs)
+        return [r.out_tokens for r in reqs]
+
+    assert run(False) == run(True)
+
+
+def test_engine_phase_step_timing(subject, rng):
+    """Per-phase timing lands in the metrics snapshot: each compiled
+    shape's first call is split into "<phase>_compile" so the base
+    prefill/decode series are steady-state only."""
+    cfg, _ = subject
+    eng = make_engine(subject, paged=True, page_size=8)
+    reqs = [eng.submit(rng.integers(1, cfg.vocab, size=n).astype(np.int32),
+                       max_new=4) for n in (6, 20)]   # two prefill buckets
+    eng.run()
+    assert all(r.done for r in reqs)
+    phases = eng.metrics.snapshot()["phase_step_s"]
+    # one compile sample per bucket shape; steady prefills only for
+    # shapes prefilled more than once (none here)
+    assert phases["prefill_compile"]["count"] == 2
+    assert phases["decode_compile"]["count"] == 1
+    assert phases["decode"]["count"] >= 2
+    assert 0 < phases["decode"]["mean_s"] <= phases["decode"]["p95_s"]
+    # the compile call dwarfs a steady decode step on this subject
+    assert phases["decode_compile"]["mean_s"] > phases["decode"]["mean_s"]
+
+
 def test_queue_drain_order_fcfs(subject, rng):
     """More requests than slots: admission follows submission order."""
     cfg, _ = subject

@@ -1,5 +1,6 @@
 """Equivalence tests for the §Perf optimized execution paths against
 their plain-JAX oracles (the optimizations must not change the math)."""
+import dataclasses
 import os
 import numpy as np
 import jax
@@ -7,9 +8,15 @@ import jax.numpy as jnp
 import pytest
 
 from repro.configs import registry
+from repro.core import pipeline
+from repro.core.qlinear import (QLinearGroup, QuantConfig, quantize_linear,
+                                quantize_linear_group)
+from repro.kernels import ops
 from repro.launch.mesh import compat_make_mesh
 from repro.models import layers as L
+from repro.models import model as M
 from repro.models import recurrent as R
+from repro.models import transformer as T
 from repro.models.common import Parallel
 from repro.models.param import materialize
 
@@ -106,6 +113,121 @@ def test_decode_unroll_matches_scan():
         np.testing.assert_allclose(np.asarray(a, np.float32),
                                    np.asarray(b2, np.float32),
                                    rtol=5e-2, atol=5e-2)
+
+
+# ---------------------------------------------------------------------------
+# Decode fast path: N-fused QKV / gate+up vs the unfused oracle
+# ---------------------------------------------------------------------------
+def test_fused_fp_model_matches_unfused():
+    """fp fusion is pure concatenation — prefill and decode logits must
+    match the per-projection model exactly (same contractions)."""
+    cfg = registry.get("tiny-lm").reduced()
+    par = Parallel(remat=False, attn_chunk=32)
+    params = M.init_params(cfg, par, jax.random.PRNGKey(0))
+    fused = T.fuse_params_for_decode(params)
+    rng = np.random.default_rng(0)
+    b, s, max_seq = 2, 12, 32
+    toks = jnp.asarray(rng.integers(1, cfg.vocab - 1, (b, s + 1)), jnp.int32)
+    l1, c1 = M.prefill(cfg, par, params, {"tokens": toks[:, :s]}, max_seq)
+    l2, c2 = M.prefill(cfg, par, fused, {"tokens": toks[:, :s]}, max_seq)
+    np.testing.assert_allclose(np.asarray(l1, np.float32),
+                               np.asarray(l2, np.float32),
+                               rtol=1e-5, atol=1e-5)
+    pos = jnp.full((b,), s, jnp.int32)
+    d1, _ = M.decode_step(cfg, par, params, toks[:, s], pos, c1, max_seq)
+    d2, _ = M.decode_step(cfg, par, fused, toks[:, s], pos, c2, max_seq)
+    np.testing.assert_allclose(np.asarray(d1, np.float32),
+                               np.asarray(d2, np.float32),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_fused_group_qlinear_matches_member_oracle(rng):
+    """A fused QLinearGroup (one quantization over concat(ws)) must give
+    the SAME outputs as running its sliced per-member QLinears — the
+    members are views over identical packed bytes."""
+    k = 640
+    ws = [jnp.asarray(rng.normal(size=(k, n)) * 0.05, jnp.float32)
+          for n in (128, 256, 128)]
+    stat = jnp.asarray(rng.uniform(0.1, 10.0, k), jnp.float32)
+    g = quantize_linear_group(ws, stat, QuantConfig(ratio=0.2, multiple=128))
+    x = jnp.asarray(rng.normal(size=(4, k)), jnp.float32)
+    ys = g.forward_split(x)
+    for y, member in zip(ys, g.members()):
+        np.testing.assert_allclose(np.asarray(y, np.float32),
+                                   np.asarray(member.__matmul_x__(x),
+                                              np.float32),
+                                   rtol=1e-5, atol=1e-5)
+    # kernel path over the fused layout vs the unfused XLA oracle
+    gk = dataclasses.replace(
+        g, inner=dataclasses.replace(g.inner, use_kernel=True))
+    xb = x.astype(jnp.bfloat16)
+    for y, member in zip(gk.forward_split(xb), g.members()):
+        np.testing.assert_allclose(np.asarray(y, np.float32),
+                                   np.asarray(member.__matmul_x__(xb),
+                                              np.float32),
+                                   rtol=2e-2, atol=0.06 * np.sqrt(k))
+
+
+def test_fused_quantized_model_matches_unfused_oracle_scan():
+    """Whole-model equivalence THROUGH the scanned stage stack: a
+    data-free fused quantization vs the same packed data consumed
+    unfused (fused groups sliced back into wq/wk/wv, wg/wu)."""
+    cfg = registry.get("tiny-lm").reduced()
+    par = Parallel(remat=False, attn_chunk=32)
+    params = M.init_params(cfg, par, jax.random.PRNGKey(0))
+    qcfg = QuantConfig(ratio=0.2, multiple=16)
+    qp = pipeline.quantize_params_data_free(params, qcfg, fuse=True)
+    # the transform must have produced stacked fused groups
+    groups = [l for l in jax.tree.leaves(
+        qp["stages"], is_leaf=lambda x: isinstance(x, QLinearGroup))
+        if isinstance(l, QLinearGroup)]
+    assert groups, "no QLinearGroup produced by fuse=True"
+    oracle = T.unfuse_params_for_oracle(qp)
+    rng = np.random.default_rng(1)
+    b, s, max_seq = 2, 8, 32
+    toks = jnp.asarray(rng.integers(1, cfg.vocab - 1, (b, s + 1)), jnp.int32)
+    lq, cq = M.prefill(cfg, par, qp, {"tokens": toks[:, :s]}, max_seq)
+    lu, cu = M.prefill(cfg, par, oracle, {"tokens": toks[:, :s]}, max_seq)
+    np.testing.assert_allclose(np.asarray(lq, np.float32),
+                               np.asarray(lu, np.float32),
+                               rtol=1e-5, atol=1e-5)
+    pos = jnp.full((b,), s, jnp.int32)
+    dq, _ = M.decode_step(cfg, par, qp, toks[:, s], pos, cq, max_seq)
+    du, _ = M.decode_step(cfg, par, oracle, toks[:, s], pos, cu, max_seq)
+    np.testing.assert_allclose(np.asarray(dq, np.float32),
+                               np.asarray(du, np.float32),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Pre-permuted vs stored-perm forwards (kernel path AND odd-shape fallback)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("k_s,k_b,n,kernel_feasible", [
+    (128, 512, 384, True),    # aligned: Pallas kernel path
+    (128, 192, 256, True),    # bk must drop to the common divisor 64
+    (128, 136, 192, False),   # N % 128 != 0: XLA fallback path
+])
+def test_pre_permuted_matches_stored_perm(rng, k_s, k_b, n, kernel_feasible):
+    from repro.kernels import autotune
+    k = k_s + k_b
+    w = jnp.asarray(rng.normal(size=(k, n)) * 0.05, jnp.float32)
+    stat = jnp.asarray(rng.uniform(0.1, 10.0, k), jnp.float32)
+    q = quantize_linear(w, stat, QuantConfig(ratio=k_s / k, multiple=8,
+                                             use_kernel=True))
+    assert (q.k_s, q.k_b) == (k_s, k_b)
+    assert (autotune.choose_blocks(4, q.k_s, q.k_b, n) is not None) \
+        == kernel_feasible
+    x = jnp.asarray(rng.normal(size=(4, k)), jnp.bfloat16)
+    xp = jnp.take(x, q.perm, axis=-1)
+    y_stored = ops.mixed_matmul(x, q)
+    y_pre = ops.mixed_matmul(xp, q, pre_permuted=True)
+    np.testing.assert_array_equal(np.asarray(y_stored, np.float32),
+                                  np.asarray(y_pre, np.float32))
+    # both must agree with the XLA dequant oracle
+    oracle = dataclasses.replace(q, use_kernel=False).__matmul_x__(x)
+    np.testing.assert_allclose(np.asarray(y_stored, np.float32),
+                               np.asarray(oracle, np.float32),
+                               rtol=2e-2, atol=0.06 * np.sqrt(k) * 2)
 
 
 # ---------------------------------------------------------------------------
