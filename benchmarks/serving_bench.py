@@ -21,6 +21,22 @@ block_until_ready sync is part of what is measured), so tokens_per_s
 comparisons between rows are apples-to-apples; pass
 ``Engine(time_phases=False)`` to serve without the instrumentation.
 
+Paged decode attention: the default ``paged`` rows run the Pallas
+flash-decode kernel (scalar-prefetched block tables, per-token KV
+traffic ∝ live context); a ``paged(xla)`` row pins the dense-gather
+reference path (whole pool window per token) so the decode
+attention-traffic win is recorded next to it.  Each row carries
+``kv_read_kb_per_tok``: for kernel rows this is MEASURED — every
+decode tick's (block_tables, context_lens) state is captured and the
+kernel's own K/V index map is replayed over the grid
+(``paged_attention.fetched_page_counts``, the same ``kv_block_index``
+the BlockSpec runs) to count the page DMAs actually issued; for
+XLA/contiguous rows it is the dense window the gather materializes.
+The sweep ASSERTS, per slot per tick, that the kernel's fetches stay
+≤ the slot's live tokens plus one page of slack — a live gate on the
+index-map clamp, not a restatement of the cost model: breaking the
+clamp (dead grid steps fetching fresh pages) fails the run.
+
 Emits a BENCH json (results/bench/serving_bench.json).
 """
 from __future__ import annotations
@@ -33,6 +49,7 @@ import numpy as np
 
 from benchmarks.common import markdown_table, write_result
 from repro.configs import registry
+from repro.kernels import autotune
 from repro.models import model as M
 from repro.models.common import Parallel
 from repro.runtime.engine import Engine
@@ -51,11 +68,69 @@ def kv_bytes(cfg, *, paged: bool, pool_pages: int = 0) -> int:
     return toks * per_tok
 
 
+def measured_kernel_read_kb_per_tok(cfg, tick_states) -> float:
+    """MEASURED KV bytes per generated token through the flash-decode
+    kernel: replay the kernel's own K/V index map over every recorded
+    decode-tick state and count the page DMAs it issues
+    (``fetched_page_counts`` shares ``kv_block_index`` with the
+    BlockSpec, so this tracks the kernel's real addressing, not a
+    parallel model) — and ASSERT the live-token bound per slot per
+    tick: fetched pages × page_size ≤ live tokens + one page of slack
+    (inactive rows cost exactly the one clamped slack page)."""
+    from repro.kernels.paged_attention import fetched_page_counts
+    per_tok = autotune.paged_kv_bytes_per_token(cfg.n_kv_heads,
+                                                cfg.head_dim_)
+    total_bytes, total_toks = 0, 0
+    for bt, lens in tick_states:
+        counts = fetched_page_counts(bt, lens, PAGE)
+        for slot, (fetched, live) in enumerate(zip(counts, lens)):
+            assert fetched * PAGE <= live + PAGE, (
+                f"kernel index map fetched {fetched} pages for a slot "
+                f"with {live} live tokens (tables row "
+                f"{bt[slot].tolist()}) — reads must scale with live "
+                f"context, not table capacity")
+        total_bytes += int(counts.sum()) * PAGE * per_tok
+        total_toks += int((lens > 0).sum())    # one token per live slot
+    return total_bytes * cfg.n_layers / max(total_toks, 1) / 1024
+
+
+def dense_read_kb_per_tok(cfg, *, backend: str) -> float:
+    """The dense paths' per-step window (cost model): contiguous
+    attends the whole (B, max_seq) ring; the XLA paged gather
+    materializes nblk*ps slots regardless of liveness."""
+    per_tok = autotune.paged_kv_bytes_per_token(cfg.n_kv_heads,
+                                                cfg.head_dim_)
+    slots = (MAX_SEQ if backend == "contiguous"
+             else pages_for_tokens(MAX_SEQ, PAGE) * PAGE)
+    return slots * per_tok * cfg.n_layers / 1024
+
+
 def bench_one(cfg, params, n_requests: int, *, paged: bool,
-              pool_pages=None, seed: int = 0, fused: bool = False) -> dict:
+              pool_pages=None, seed: int = 0, fused: bool = False,
+              paged_kernel: bool = True) -> dict:
     eng = Engine(cfg, PAR, params, n_slots=N_SLOTS, max_seq=MAX_SEQ,
                  prefill_buckets=(16, 64), paged=paged, page_size=PAGE,
-                 pool_pages=pool_pages, seed=seed, fuse_projections=fused)
+                 pool_pages=pool_pages, seed=seed, fuse_projections=fused,
+                 paged_kernel=paged_kernel)
+    # only claim (and gate on) measured kernel traffic when the engine
+    # really dispatches the kernel for this shape — on a TPU backend an
+    # infeasible layout (e.g. dh % 128) silently keeps the dense path
+    from repro.kernels import ops
+    kernel_active = bool(
+        paged and paged_kernel
+        and ops.paged_attention_blocks(
+            PAGE, cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads,
+            cfg.head_dim_) is not None)
+    tick_states = []
+    if kernel_active:
+        # capture each decode tick's scalar-prefetch operands so the
+        # kernel's fetch addressing can be replayed and asserted on
+        orig_decode = eng.backend.decode
+        def spy_decode(params_, toks, pos):
+            tick_states.append((eng.backend.tables.as_array().copy(),
+                                eng.backend.tables.context_lens().copy()))
+            return orig_decode(params_, toks, pos)
+        eng.backend.decode = spy_decode
     rng = np.random.default_rng(seed)
     reqs = []
     for _ in range(n_requests):
@@ -69,9 +144,15 @@ def bench_one(cfg, params, n_requests: int, *, paged: bool,
     phases = snap["phase_step_s"]
     pool = (pool_pages if pool_pages is not None
             else N_SLOTS * pages_for_tokens(MAX_SEQ, PAGE)) if paged else 0
+    if kernel_active:
+        read_kb = measured_kernel_read_kb_per_tok(cfg, tick_states)
+    else:
+        read_kb = dense_read_kb_per_tok(
+            cfg, backend="contiguous" if not paged else "xla")
     return {
         "backend": eng.backend.name + ("(tight)" if pool_pages else "")
-        + ("(fused)" if fused else ""),
+        + ("(fused)" if fused else "")
+        + ("(xla)" if paged and not paged_kernel else ""),
         "requests": n_requests,
         "all_done": all(r.done for r in reqs),
         "tokens_per_s": snap["generated_tokens"] / max(wall, 1e-9),
@@ -81,6 +162,7 @@ def bench_one(cfg, params, n_requests: int, *, paged: bool,
         "page_util_max": snap["page_util_max"],
         "preemptions": snap["preemptions"],
         "kv_mb_reserved": kv_bytes(cfg, paged=paged, pool_pages=pool) / 1e6,
+        "kv_read_kb_per_tok": read_kb,
         "prefill_step_ms": phases.get("prefill", {}).get(
             "mean_s", 0.0) * 1e3,
         "decode_step_ms": phases.get("decode", {}).get(
@@ -101,6 +183,8 @@ def run(quick: bool = False) -> dict:
     for n in loads:
         rows.append(bench_one(cfg, params, n, paged=False))
         rows.append(bench_one(cfg, params, n, paged=True))
+        rows.append(bench_one(cfg, params, n, paged=True,
+                              paged_kernel=False))
         rows.append(bench_one(cfg, params, n, paged=True, fused=True))
         rows.append(bench_one(cfg, params, n, paged=True,
                               pool_pages=tight))
@@ -110,8 +194,8 @@ def run(quick: bool = False) -> dict:
     print(markdown_table(rows, ["backend", "requests", "tokens_per_s",
                                 "ttft_mean_s", "queue_depth_max",
                                 "page_util_max", "preemptions",
-                                "kv_mb_reserved", "prefill_step_ms",
-                                "decode_step_ms"]))
+                                "kv_mb_reserved", "kv_read_kb_per_tok",
+                                "prefill_step_ms", "decode_step_ms"]))
     return payload
 
 

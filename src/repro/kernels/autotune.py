@@ -119,6 +119,22 @@ def kernel_vmem_bytes(bm: int, bn: int, bk: int) -> int:
     return 2 * inputs + bm * bn * 4
 
 
+def gather_in_kernel_ok(choice: BlockChoice, m: int, k: int,
+                        vmem_budget: Optional[int] = None) -> bool:
+    """Whether the mixed kernel can host the salient-channel gather
+    itself: the activation tile grows from (bm, bk) to (bm, K) — the
+    full permuted row must sit in VMEM so scalar-prefetched perm indices
+    can select each K step's columns.  In exchange the activation is
+    fetched once per M tile instead of once per (M, N) tile and the
+    host-side XLA gather disappears.  True when the swap still fits the
+    VMEM budget."""
+    if vmem_budget is None:
+        vmem_budget = VMEM_BUDGET
+    bm = min(choice.bm, m)
+    grown = choice.vmem_bytes - 2 * bm * choice.bk * 2 + 2 * bm * k * 2
+    return grown <= vmem_budget
+
+
 def weight_bytes(k_s: int, k_b: int, n: int) -> int:
     """Packed weight bytes one call must stream (nibbles + sign bits)."""
     return (k_s // 2) * n + (k_b // 8) * n
@@ -205,9 +221,83 @@ def _choose_blocks_cached(m: int, k_s: int, k_b: int, n: int,
     return best
 
 
+# ---------------------------------------------------------------------------
+# Paged-attention decode kernel (KV page tiles)
+# ---------------------------------------------------------------------------
+# The paged flash-decode kernel's KV tile is one pool page per grid step:
+# (ps, bh, dh) slabs of K and V for `bh` kv heads at a time.  The only
+# free block dim is `bh` — pages are non-contiguous in the pool, so the
+# tile cannot span pages, and ps/dh are fixed by the pool layout.  The
+# model picks the largest `bh` whose double-buffered K/V tiles + the q
+# tile + the f32 (m, l, acc) scratch fit the VMEM budget (fewer grid
+# steps, better DMA overlap), and exposes the per-token KV read bytes
+# the serving bench asserts against.
+
+
+@dataclass(frozen=True)
+class PagedAttnChoice:
+    """KV-tile pick for one paged-attention call plus its cost terms."""
+    bh: int                    # kv heads per block
+    vmem_bytes: int
+    kv_bytes_per_token: int    # K+V bytes one live token costs per read
+
+
+def paged_kv_bytes_per_token(hkv: int, dh: int, itemsize: int = 2) -> int:
+    """K+V bytes the decode read streams per live token (all kv heads)."""
+    return 2 * hkv * dh * itemsize
+
+
+def paged_read_bytes(context_len: int, ps: int, hkv: int, dh: int,
+                     itemsize: int = 2) -> int:
+    """Modeled KV bytes ONE decode step reads for a request of
+    ``context_len`` live tokens under the paged kernel: whole pages, so
+    at most one page of slack past the live tokens."""
+    pages = -(-max(int(context_len), 0) // ps)
+    return pages * ps * paged_kv_bytes_per_token(hkv, dh, itemsize)
+
+
+def paged_attn_vmem_bytes(bh: int, rep: int, dh: int, ps: int,
+                          kv_itemsize: int = 2, q_itemsize: int = 2) -> int:
+    """Per-step VMEM footprint: double-buffered K/V page tiles and q
+    tile, the f32 output tile, and the resident (m, l, acc) scratch."""
+    kv = 2 * ps * bh * dh * kv_itemsize          # one K + one V tile
+    qo = bh * rep * dh * (q_itemsize + 4)        # q tile + f32 out tile
+    scratch = bh * rep * (dh + 2) * 4            # acc + m + l
+    return 2 * (kv + qo) + scratch
+
+
+def choose_paged_blocks(hkv: int, rep: int, dh: int, ps: int,
+                        vmem_budget: Optional[int] = None,
+                        ) -> Optional[PagedAttnChoice]:
+    """Pick the kv-heads-per-block tile for a paged-attention shape, or
+    None when even bh=1 cannot fit (callers fall back to the XLA gather
+    path).  Memoized like :func:`choose_blocks` — decode hits the same
+    (hkv, rep, dh, ps) key every layer of every tick."""
+    return _choose_paged_cached(
+        hkv, rep, dh, ps,
+        VMEM_BUDGET if vmem_budget is None else vmem_budget)
+
+
+@functools.lru_cache(maxsize=1024)
+def _choose_paged_cached(hkv: int, rep: int, dh: int, ps: int,
+                         vmem_budget: int) -> Optional[PagedAttnChoice]:
+    if hkv <= 0 or rep <= 0 or dh <= 0 or ps <= 0:
+        return None
+    for bh in _divisors(hkv, hkv):
+        vmem = paged_attn_vmem_bytes(bh, rep, dh, ps)
+        if vmem <= vmem_budget:
+            return PagedAttnChoice(bh, vmem,
+                                   paged_kv_bytes_per_token(hkv, dh))
+    return None
+
+
 def cache_info():
-    return _choose_blocks_cached.cache_info()
+    """Dispatch-cache stats for BOTH memoized choosers (matmul block
+    picks and paged-attention KV tiles)."""
+    return {"matmul": _choose_blocks_cached.cache_info(),
+            "paged_attention": _choose_paged_cached.cache_info()}
 
 
 def cache_clear() -> None:
     _choose_blocks_cached.cache_clear()
+    _choose_paged_cached.cache_clear()

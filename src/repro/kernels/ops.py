@@ -26,6 +26,7 @@ from repro.kernels import autotune
 from repro.kernels.binary_matmul import binary_matmul
 from repro.kernels.int4_matmul import int4_matmul
 from repro.kernels.mixed_matmul import mixed_matmul as _mixed
+from repro.kernels.paged_attention import paged_attention as _paged_attn
 
 INTERPRET = jax.default_backend() != "tpu"
 
@@ -42,12 +43,14 @@ def _kernel_choice(m: int, k_s: int, k_b: int, n: int):
 def mixed_matmul(x: jax.Array, q, *, pre_permuted: bool = False) -> jax.Array:
     """PTQ1.61 linear forward for a QLinear `q` (2-D weights).
 
-    Flattens batch dims, checks kernel feasibility, THEN permutes
-    channels salient-first (one gather) and runs the fused kernel with
-    autotuned blocks; falls back to the XLA dequant path for unaligned
-    shapes.  With ``pre_permuted=True`` the caller asserts ``x`` is
-    already in salient-first channel order and no gather is issued on
-    either path.
+    Flattens batch dims, checks kernel feasibility, then runs the fused
+    kernel with autotuned blocks; falls back to the XLA dequant path for
+    unaligned shapes.  The salient-first channel permutation happens
+    INSIDE the kernel when the full-K activation tile fits VMEM (the
+    perm rides in as a scalar-prefetch operand — no host-side gather at
+    all); otherwise one XLA gather precedes the call.  With
+    ``pre_permuted=True`` the caller asserts ``x`` is already in
+    salient-first channel order and no gather is issued on any path.
     """
     lead = x.shape[:-1]
     k = x.shape[-1]
@@ -61,14 +64,47 @@ def mixed_matmul(x: jax.Array, q, *, pre_permuted: bool = False) -> jax.Array:
         import dataclasses
         return dataclasses.replace(q, use_kernel=False).__matmul_x__(x)
     xf = x.reshape(-1, k)
-    xp = xf if pre_permuted else jnp.take(xf, q.perm, axis=-1)
+    perm = None
+    if pre_permuted:
+        xp = xf
+    elif INTERPRET and autotune.gather_in_kernel_ok(choice, m, k):
+        # gather moves into the kernel (scalar-prefetched perm).  Pinned
+        # to interpret mode for now: the dynamic lane-dim jnp.take over
+        # SMEM-sliced indices is unvalidated under Mosaic lowering — on
+        # a real TPU the host-side gather below stays until it is.
+        xp, perm = xf, q.perm
+    else:
+        xp = jnp.take(xf, q.perm, axis=-1)
     alpha_out = (q.alpha_s * q.alpha_r1).astype(jnp.float32)
     y = _mixed(xp.astype(jnp.bfloat16), q.w4, q.s4, q.z4, q.bits,
-               alpha_out, q.alpha_r2.astype(jnp.float32),
+               alpha_out, q.alpha_r2.astype(jnp.float32), perm=perm,
                bm=choice.bm, bn=choice.bn, bk=choice.bk,
                interpret=INTERPRET)
     return y.reshape(lead + (q.n,)).astype(x.dtype)
 
 
-__all__ = ["binary_matmul", "int4_matmul", "mixed_matmul", "INTERPRET",
+def paged_attention_blocks(ps: int, hkv: int, rep: int, dh: int):
+    """Feasibility gate for the paged flash-decode kernel: the
+    autotuned KV-tile choice, or None when the kernel cannot serve the
+    shape and the caller must keep the XLA-gather reference path.  On a
+    real TPU backend the pool layout must also respect the MXU/VPU
+    tiling floors; interpret mode has no such constraint."""
+    if not INTERPRET and (dh % 128 != 0 or ps % 8 != 0):
+        return None
+    return autotune.choose_paged_blocks(hkv, rep, dh, ps)
+
+
+def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                    block_tables: jax.Array, context_lens: jax.Array, *,
+                    window=None, softcap=None, bh=None) -> jax.Array:
+    """Paged flash-decode forward (see kernels.paged_attention); the
+    caller is expected to have consulted :func:`paged_attention_blocks`
+    first — this wrapper only pins the interpret mode."""
+    return _paged_attn(q, k_pool, v_pool, block_tables, context_lens,
+                       window=window, softcap=softcap, bh=bh,
+                       interpret=INTERPRET)
+
+
+__all__ = ["binary_matmul", "int4_matmul", "mixed_matmul",
+           "paged_attention", "paged_attention_blocks", "INTERPRET",
            "autotune"]

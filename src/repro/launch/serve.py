@@ -9,8 +9,10 @@ mixed_matmul (interpret mode on CPU) instead of the XLA dequant path.
 ``--paged`` serves from the paged KV cache (block-table allocator +
 FCFS/preemption scheduler; see repro.runtime.paged_cache) with
 ``--page-size`` tokens per page and a ``--pool-pages`` global budget;
-engine metrics (tokens/s, TTFT, queue depth, page utilization) are
-included in the JSON output either way.
+paged decode attention runs through the Pallas flash-decode kernel on
+feasible shapes (``--no-paged-kernel`` pins the XLA dense-gather
+reference path).  Engine metrics (tokens/s, TTFT, queue depth, page
+utilization) are included in the JSON output either way.
 """
 from __future__ import annotations
 
@@ -77,6 +79,7 @@ def run(args):
                     prefill_buckets=(args.max_seq // 8, args.max_seq // 2),
                     paged=args.paged, page_size=args.page_size,
                     pool_pages=args.pool_pages,
+                    paged_kernel=not args.no_paged_kernel,
                     fuse_projections=args.fused and args.quantize == "none")
 
     rng = np.random.default_rng(args.seed)
@@ -137,6 +140,10 @@ def parse_args(argv=None):
     p.add_argument("--pool-pages", type=int, default=None,
                    help="total pages in the pool (default: full parity "
                         "with the contiguous layout, slots*max_seq/page)")
+    p.add_argument("--no-paged-kernel", action="store_true",
+                   help="pin paged decode attention to the XLA-gather "
+                        "reference path instead of the Pallas "
+                        "flash-decode kernel")
     p.add_argument("--deadline-s", type=float, default=None,
                    help="per-request admission deadline in seconds")
     p.add_argument("--max-seq", type=int, default=128)

@@ -386,17 +386,31 @@ def scatter_pages(pool: Dict[str, jax.Array], k: jax.Array, v: jax.Array,
 def attention_decode_paged(cfg: ArchConfig, par: Parallel, p: Tree,
                            x: jax.Array, pos: jax.Array, cache: Tree,
                            block_tables: jax.Array, *, layer: int,
+                           lengths: Optional[jax.Array] = None,
                            use_rope: bool = True,
-                           window: Optional[int] = None):
+                           window: Optional[int] = None,
+                           use_kernel: bool = True):
     """Single-token decode against the shared page pool.
 
     x: (B,1,D); pos: (B,) absolute positions; cache: {"k","v"} page pools
     of shape (L, P, ps, hkv, dh); block_tables: (B, nblk) int32 page ids,
-    -1 = unassigned.  The new K/V scatter-writes into the owner's page
-    (requests with no page for ``pos`` — inactive slots — scatter to the
-    out-of-range sentinel and are dropped); the read gathers the request's
-    pages into a (B, nblk*ps, hkv, dh) context and masks by the implied
-    positions, so the whole step stays inside one jitted program.
+    -1 = unassigned; lengths: (B,) int32 live context per request
+    (pos+1 for active rows, 0 for inactive — the engine plumbs them from
+    ``BlockTables.context_lens``).  The new K/V scatter-writes into the
+    owner's page (requests with no page for ``pos`` — inactive slots —
+    scatter to the out-of-range sentinel and are dropped).
+
+    The read has two paths, mirroring ``ops.mixed_matmul``:
+
+    * **Pallas flash-decode kernel** (default on feasible shapes, needs
+      ``lengths``): walks each request's pages straight out of the pool
+      with scalar-prefetched block tables — per-token KV traffic scales
+      with the LIVE context, and no (B, nblk*ps, hkv, dh) gather buffer
+      ever exists in HBM (``repro.kernels.paged_attention``).
+    * **XLA gather reference/fallback**: gathers the request's pages
+      into a dense context and masks by the implied positions — the
+      oracle the kernel is tested against, and the path taken when the
+      shape is infeasible or ``use_kernel=False``.
     """
     b = x.shape[0]
     q, k, v = _project_qkv(cfg, par, p, x, x, pos[:, None], pos[:, None],
@@ -412,16 +426,27 @@ def attention_decode_paged(cfg: ArchConfig, par: Parallel, p: Tree,
     ck = cache["k"].at[layer, page, slot].set(k[:, 0], mode="drop")
     cv = cache["v"].at[layer, page, slot].set(v[:, 0], mode="drop")
     new_cache = {"k": ck, "v": cv}
-    # -- gather this request's pages and attend -------------------------
-    bt = jnp.clip(block_tables, 0)                       # (B, nblk)
-    k_ctx = ck[layer][bt].reshape(b, nblk * ps, -1, ck.shape[-1])
-    v_ctx = cv[layer][bt].reshape(b, nblk * ps, -1, cv.shape[-1])
-    kp = paged_key_positions(block_tables, ps)           # (B, nblk*ps)
-    qp = pos[:, None, None]
-    mask = jnp.logical_and(kp[:, None, :] <= qp, kp[:, None, :] >= 0)
-    if window is not None:
-        mask = jnp.logical_and(mask, qp - kp[:, None, :] < window)
-    o = _attend(q, k_ctx, v_ctx, mask, cfg.logit_softcap)
+    # -- attend over this request's pages -------------------------------
+    from repro.kernels import ops
+    hkv = k.shape[2]
+    hq = q.shape[2]
+    choice = (ops.paged_attention_blocks(ps, hkv, hq // hkv, q.shape[-1])
+              if use_kernel and lengths is not None else None)
+    if choice is not None:
+        o = ops.paged_attention(q[:, 0], ck[layer], cv[layer],
+                                block_tables, lengths, window=window,
+                                softcap=cfg.logit_softcap, bh=choice.bh)
+        o = o[:, None]                                   # (B, 1, hq, dh)
+    else:
+        bt = jnp.clip(block_tables, 0)                   # (B, nblk)
+        k_ctx = ck[layer][bt].reshape(b, nblk * ps, -1, ck.shape[-1])
+        v_ctx = cv[layer][bt].reshape(b, nblk * ps, -1, cv.shape[-1])
+        kp = paged_key_positions(block_tables, ps)       # (B, nblk*ps)
+        qp = pos[:, None, None]
+        mask = jnp.logical_and(kp[:, None, :] <= qp, kp[:, None, :] >= 0)
+        if window is not None:
+            mask = jnp.logical_and(mask, qp - kp[:, None, :] < window)
+        o = _attend(q, k_ctx, v_ctx, mask, cfg.logit_softcap)
     o = o.astype(x.dtype).reshape(b, 1, -1)
     return dense(o, p["wo"]), new_cache
 

@@ -227,15 +227,20 @@ def init_paged_caches(cfg: ArchConfig, par: Parallel, n_slots: int,
 
 def decode_step_paged(cfg: ArchConfig, par: Parallel, params: Tree,
                       token: jax.Array, pos: jax.Array, caches: Tree,
-                      block_tables: jax.Array, max_seq: int):
+                      block_tables: jax.Array, context_lens=None,
+                      max_seq: int = 0, use_kernel: bool = True):
     """One paged decode step.  token/pos (B,) int32; block_tables
-    (B, nblk) int32 page ids (-1 = unassigned).  The KV gather/scatter
-    over page indices happens inside this (jitted) program."""
+    (B, nblk) int32 page ids (-1 = unassigned); context_lens (B,) int32
+    live tokens per slot (0 = inactive).  The KV page reads/writes
+    happen inside this (jitted) program — through the Pallas
+    flash-decode kernel on feasible shapes (``use_kernel=True``, the
+    default) or the XLA gather reference otherwise."""
     x = embed_tokens(cfg, params, token[:, None])
     new_caches = []
     for stage, sp, c in zip(cfg.stages, params["stages"], caches):
         x, nc = T.stage_step_paged(cfg, par, stage, sp, x, pos, c,
-                                   block_tables, max_seq)
+                                   block_tables, context_lens, max_seq,
+                                   use_kernel)
         new_caches.append(nc)
     logits = logits_fn(cfg, params, x)
     return logits[:, 0], tuple(new_caches)

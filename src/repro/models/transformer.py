@@ -376,14 +376,16 @@ ATTN_KINDS = ("dense", "moe", "local")
 
 def block_step_paged(cfg: ArchConfig, par: Parallel, kind: str, p: Tree,
                      x: jax.Array, pos: jax.Array, cache: Tree,
-                     block_tables: jax.Array, max_seq: int, layer: int):
+                     block_tables: jax.Array, context_lens, max_seq: int,
+                     layer: int, use_kernel: bool = True):
     """Paged variant of :func:`block_step` for attention blocks; recurrent
     blocks carry O(1) per-slot state and keep the dense (unrolled) path."""
     if kind in ATTN_KINDS:
         w = _kind_window(cfg, kind, max_seq)
         h, new_cache = L.attention_decode_paged(
             cfg, par, p["attn"], L.apply_norm(cfg, p["ln1"], x), pos,
-            cache, block_tables, window=w, layer=layer)
+            cache, block_tables, lengths=context_lens, window=w,
+            layer=layer, use_kernel=use_kernel)
         x = x + h
         z = L.apply_norm(cfg, p["ln2"], x)
         h = L.apply_moe(cfg, p["mlp"], z, par) if kind == "moe" else \
@@ -394,18 +396,34 @@ def block_step_paged(cfg: ArchConfig, par: Parallel, kind: str, p: Tree,
 
 def stage_step_paged(cfg: ArchConfig, par: Parallel, stage: Stage,
                      sparams: Tree, x: jax.Array, pos: jax.Array,
-                     caches: Tree, block_tables: jax.Array, max_seq: int):
+                     caches: Tree, block_tables: jax.Array,
+                     context_lens=None, max_seq: int = 0,
+                     use_kernel: bool = True):
     """Always unrolled over layers: each layer's page writes are in-place
     slot scatters addressed into the stacked pool; a scan would round-trip
-    the whole (L, P, ps, H, dh) pool through the carry every layer."""
-    cur = list(caches)
-    for layer in range(stage.repeats):
-        lp = jax.tree.map(lambda a: a[layer], sparams)
-        for i, kind in enumerate(stage.pattern):
-            x, cur[i] = block_step_paged(cfg, par, kind, lp[i], x, pos,
-                                         cur[i], block_tables, max_seq,
-                                         layer)
-    return x, tuple(cur)
+    the whole (L, P, ps, H, dh) pool through the carry every layer.
+
+    Fully-inactive ticks (every block-table row -1, i.e. no slot owns a
+    page) short-circuit via ``lax.cond``: the whole layer walk — QKV
+    projections, page scatters, attention, MLPs — is skipped on device
+    and x/caches pass through untouched.  Per-row inactivity inside a
+    live batch is handled downstream (the kernel zero-fills rows with
+    ``context_lens == 0``; the XLA path masks their pages)."""
+
+    def walk(args):
+        x, caches = args
+        cur = list(caches)
+        for layer in range(stage.repeats):
+            lp = jax.tree.map(lambda a: a[layer], sparams)
+            for i, kind in enumerate(stage.pattern):
+                x, cur[i] = block_step_paged(cfg, par, kind, lp[i], x, pos,
+                                             cur[i], block_tables,
+                                             context_lens, max_seq, layer,
+                                             use_kernel)
+        return x, tuple(cur)
+
+    return jax.lax.cond(jnp.any(block_tables >= 0), walk,
+                        lambda args: args, (x, caches))
 
 
 def stage_splice_paged(cfg: ArchConfig, stage: Stage, pool_stage: Tree,

@@ -117,7 +117,8 @@ class _PagedBackend:
 
     name = "paged"
 
-    def __init__(self, eng: "Engine", page_size: int, pool_pages: int):
+    def __init__(self, eng: "Engine", page_size: int, pool_pages: int,
+                 use_kernel: bool = True):
         self.eng = eng
         max_blocks = pages_for_tokens(eng.max_seq, page_size)
         self.pool = PagePool(pool_pages, page_size)
@@ -126,7 +127,8 @@ class _PagedBackend:
                                          pool_pages, page_size)
         self.caches = materialize(cache_decl, jax.random.PRNGKey(0))
         self._decode = jax.jit(functools.partial(
-            M.decode_step_paged, eng.cfg, eng.par, max_seq=eng.max_seq))
+            M.decode_step_paged, eng.cfg, eng.par, max_seq=eng.max_seq,
+            use_kernel=use_kernel))
         self._splice = jax.jit(functools.partial(
             M.splice_prefill_paged, eng.cfg))
 
@@ -156,8 +158,9 @@ class _PagedBackend:
 
     def decode(self, params, toks, pos):
         bt = jnp.asarray(self.tables.as_array())
+        lens = jnp.asarray(self.tables.context_lens())
         logits, self.caches = self._decode(params, toks, pos, self.caches,
-                                           bt)
+                                           bt, lens)
         return logits
 
 
@@ -170,6 +173,7 @@ class Engine:
                  prefill_buckets=(64, 256), seed: int = 0,
                  paged: bool = False, page_size: int = 16,
                  pool_pages: Optional[int] = None,
+                 paged_kernel: bool = True,
                  scheduler: Optional[Scheduler] = None,
                  metrics: Optional[EngineMetrics] = None,
                  fuse_projections: bool = False,
@@ -202,7 +206,11 @@ class Engine:
                 raise ValueError(f"page_size must be positive, got {page_size}")
             if pool_pages is None:
                 pool_pages = n_slots * pages_for_tokens(max_seq, page_size)
-            self.backend = _PagedBackend(self, page_size, pool_pages)
+            # paged_kernel: paged decode attention through the Pallas
+            # flash-decode kernel on feasible shapes (default); False
+            # pins the XLA-gather reference path (oracle / debugging)
+            self.backend = _PagedBackend(self, page_size, pool_pages,
+                                         use_kernel=paged_kernel)
         else:
             self.backend = _ContiguousBackend(self)
 

@@ -115,10 +115,18 @@ class BlockTables:
         self.max_blocks = int(max_blocks)
         self._tables = np.full((n_slots, max_blocks), -1, np.int32)
         self._owned: Dict[int, List[int]] = {s: [] for s in range(n_slots)}
+        # live context length per slot (tokens the next decode step may
+        # attend, incl. the one it writes); 0 = inactive.  Maintained by
+        # ensure_for_position/release and consumed by the flash-decode
+        # kernel's scalar-prefetch operands every tick.
+        self._lens = np.zeros((n_slots,), np.int32)
 
     # ------------------------------------------------------------------
     def as_array(self) -> np.ndarray:
         return self._tables
+
+    def context_lens(self) -> np.ndarray:
+        return self._lens
 
     def owned(self, slot: int) -> List[int]:
         return list(self._owned[slot])
@@ -144,8 +152,14 @@ class BlockTables:
         return True
 
     def ensure_for_position(self, slot: int, pos: int) -> bool:
-        """Make sure the page holding token position ``pos`` exists."""
-        return self.ensure_blocks(slot, pos // self.pool.page_size + 1)
+        """Make sure the page holding token position ``pos`` exists, and
+        record the slot's live context length (``pos + 1``: the engine
+        calls this for the position the next decode step writes, which
+        is also the last position that step attends)."""
+        ok = self.ensure_blocks(slot, pos // self.pool.page_size + 1)
+        if ok:
+            self._lens[slot] = pos + 1
+        return ok
 
     def release(self, slot: int) -> int:
         """Free every page owned by ``slot``; returns how many."""
@@ -155,4 +169,5 @@ class BlockTables:
             self.pool.free(pages)
         self._owned[slot] = []
         self._tables[slot, :] = -1
+        self._lens[slot] = 0
         return n

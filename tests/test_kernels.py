@@ -96,6 +96,48 @@ def test_mixed_matches_qlinear_forward(rng):
                                atol=0.06 * np.sqrt(k))
 
 
+def test_mixed_matmul_gather_in_kernel_bit_identical(rng):
+    """The scalar-prefetched perm path (gather inside the kernel, full-K
+    x tile) is pure data movement: results must be BIT-identical to
+    pre-gathering the activation on the host."""
+    m, k_s, k_b, n = 8, 128, 384, 128
+    k = k_s + k_b
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.bfloat16)
+    w4, s4, z4 = make_int4(rng, k_s, n)
+    bits, a_out, a_in = make_binary(rng, k_b, n)
+    perm = jnp.asarray(rng.permutation(k), jnp.int32)
+    xp = jnp.take(x, perm, axis=-1)
+    y_pre = mixed_matmul(xp, w4, s4, z4, bits, a_out, a_in, interpret=True)
+    y_ker = mixed_matmul(x, w4, s4, z4, bits, a_out, a_in, perm,
+                         interpret=True)
+    np.testing.assert_array_equal(np.asarray(y_ker, np.float32),
+                                  np.asarray(y_pre, np.float32))
+
+
+def test_ops_mixed_matmul_uses_in_kernel_gather(rng):
+    """ops.mixed_matmul routes the decode-shaped QLinear forward through
+    the in-kernel gather (no host-side permuted copy of x) and still
+    matches the XLA dequant oracle."""
+    from repro.core.qlinear import QuantConfig, quantize_linear
+    from repro.kernels import autotune, ops
+
+    k, n = 640, 256
+    w = jnp.asarray(rng.normal(size=(k, n)) * 0.05, jnp.float32)
+    stat = jnp.asarray(rng.uniform(0.1, 10.0, k), jnp.float32)
+    q = quantize_linear(w, stat, QuantConfig(ratio=0.2, multiple=128))
+    x = jnp.asarray(rng.normal(size=(4, k)), jnp.bfloat16)
+    choice = autotune.choose_blocks(4, q.k_s, q.k_b, q.n)
+    assert autotune.gather_in_kernel_ok(choice, 4, k)   # decode M: fits
+    y_ker = ops.mixed_matmul(x, q).astype(np.float32)
+    y_xla = q.__matmul_x__(x).astype(np.float32)
+    np.testing.assert_allclose(y_ker, y_xla, rtol=2e-2,
+                               atol=0.06 * np.sqrt(k))
+    # huge-K prefill shapes that overflow the full-K tile budget fall
+    # back to the host-side gather, never to a wrong answer
+    assert not autotune.gather_in_kernel_ok(choice, 4, k,
+                                            vmem_budget=1 << 12)
+
+
 def test_mixed_matmul_mismatched_k_spans(rng):
     """k_s=128, k_b=192: no single bk ≤ 128 divides both spans at the old
     default — the kernel must repair bk to the common divisor (64), not

@@ -1,0 +1,343 @@
+"""Paged flash-decode attention kernel: parity vs the XLA-gather
+reference, autotuned KV tiles, the fully-inactive short-circuit, and
+engine-level greedy identity (kernel on vs off) across preemption.
+
+Parity structure mirrors test_kernels.py: the Pallas kernel (interpret
+mode on CPU) against a pure-jnp oracle built exactly like
+``layers.attention_decode_paged``'s fallback path — dense page gather,
+implied-position mask, ``layers._attend``.  The engine-level identity
+tests run in f32 (params AND KV pools): the two paths round differently
+at the bf16 ulp, while an untrained tiny-lm's top-2 logit gaps sit at
+that same ulp, so bf16 token identity would be a coin flip on ties —
+in f32 the path delta (~1e-6 relative) is three orders below the gaps
+and identity is robust.
+"""
+import math
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import registry
+from repro.kernels import autotune, ops
+from repro.models import layers as L
+from repro.models import model as M
+from repro.models.common import Parallel
+from repro.runtime.engine import Engine
+
+PAR = Parallel(remat=False, attn_chunk=32)
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Kernel vs dense-gather oracle
+# ---------------------------------------------------------------------------
+def _oracle(q, k_pool, v_pool, bt, lens, window=None, softcap=None):
+    """The XLA reference read: gather pages dense, mask implied
+    positions, one-shot softmax (layers._attend semantics)."""
+    b, hq, dh = q.shape
+    _, ps, hkv, _ = k_pool.shape
+    nblk = bt.shape[1]
+    kctx = k_pool[jnp.clip(bt, 0)].reshape(b, nblk * ps, hkv, dh)
+    vctx = v_pool[jnp.clip(bt, 0)].reshape(b, nblk * ps, hkv, dh)
+    kp = L.paged_key_positions(jnp.asarray(bt), ps)
+    pos = lens[:, None] - 1
+    mask = jnp.logical_and(kp <= pos, kp >= 0)
+    if window is not None:
+        mask = jnp.logical_and(mask, pos - kp < window)
+    o = L._attend(q[:, None], kctx, vctx, mask[:, None, :], softcap)
+    return np.asarray(o[:, 0], np.float32)
+
+
+def _pool_state(rng, num_pages, ps, hkv, dh, dtype):
+    k_pool = jnp.asarray(rng.normal(size=(num_pages, ps, hkv, dh)), dtype)
+    v_pool = jnp.asarray(rng.normal(size=(num_pages, ps, hkv, dh)), dtype)
+    return k_pool, v_pool
+
+
+@pytest.mark.parametrize("rep", [1, 2, 4])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_kernel_parity_ragged_gqa(rng, rep, dtype):
+    """Ragged lengths (incl. a page-boundary length and an inactive
+    len=0 row) across GQA head ratios."""
+    b, num_pages, ps, hkv, dh, nblk = 4, 20, 8, 2, 16, 5
+    hq = hkv * rep
+    q = jnp.asarray(rng.normal(size=(b, hq, dh)), dtype)
+    k_pool, v_pool = _pool_state(rng, num_pages, ps, hkv, dh, dtype)
+    bt = np.full((b, nblk), -1, np.int32)
+    bt[0, :3] = [3, 7, 1]
+    bt[1, :1] = [0]
+    bt[2, :5] = [2, 4, 5, 9, 11]
+    lens = np.asarray([17, 8, 40, 0], np.int32)     # row 3: inactive
+    out = np.asarray(ops.paged_attention(q, k_pool, v_pool,
+                                         jnp.asarray(bt),
+                                         jnp.asarray(lens)))
+    ref = _oracle(q, k_pool, v_pool, jnp.asarray(bt), jnp.asarray(lens))
+    tol = 1e-5 if dtype == jnp.float32 else 0.06 * math.sqrt(dh)
+    np.testing.assert_allclose(out[:3], ref[:3], rtol=2e-2, atol=tol)
+    # inactive row: exact zeros (never the reference's uniform garbage)
+    np.testing.assert_array_equal(out[3], 0.0)
+
+
+def test_kernel_parity_freed_pages_mid_table(rng):
+    """-1 entries in the MIDDLE of a table (freed pages) are masked like
+    the implied-position reference, not attended via a clamped fetch."""
+    b, num_pages, ps, hkv, dh, nblk = 2, 16, 8, 2, 16, 4
+    q = jnp.asarray(rng.normal(size=(b, hkv * 2, dh)), jnp.float32)
+    k_pool, v_pool = _pool_state(rng, num_pages, ps, hkv, dh, jnp.float32)
+    bt = np.asarray([[5, -1, 8, 2],
+                     [1, 3, -1, -1]], np.int32)
+    lens = np.asarray([29, 14], np.int32)
+    out = np.asarray(ops.paged_attention(q, k_pool, v_pool,
+                                         jnp.asarray(bt),
+                                         jnp.asarray(lens)))
+    ref = _oracle(q, k_pool, v_pool, jnp.asarray(bt), jnp.asarray(lens))
+    np.testing.assert_allclose(out, ref, rtol=2e-2, atol=1e-5)
+
+
+@pytest.mark.parametrize("window,softcap", [(12, None), (12, 30.0),
+                                            (3, None), (None, 30.0)])
+def test_kernel_parity_window_softcap(rng, window, softcap):
+    b, num_pages, ps, hkv, dh, nblk = 3, 16, 8, 2, 16, 5
+    q = jnp.asarray(rng.normal(size=(b, hkv * 2, dh)), jnp.float32)
+    k_pool, v_pool = _pool_state(rng, num_pages, ps, hkv, dh, jnp.float32)
+    bt = np.full((b, nblk), -1, np.int32)
+    bt[0, :3] = [3, 7, 1]
+    bt[1, :2] = [0, 6]
+    bt[2, :5] = [2, 4, 5, 9, 11]
+    lens = np.asarray([23, 9, 37], np.int32)
+    out = np.asarray(ops.paged_attention(
+        q, k_pool, v_pool, jnp.asarray(bt), jnp.asarray(lens),
+        window=window, softcap=softcap))
+    ref = _oracle(q, k_pool, v_pool, jnp.asarray(bt), jnp.asarray(lens),
+                  window=window, softcap=softcap)
+    np.testing.assert_allclose(out, ref, rtol=2e-2, atol=1e-5)
+
+
+def test_kernel_bh_sweep_block_size_independent(rng):
+    """Results must not depend on the kv-heads-per-block tile."""
+    b, num_pages, ps, hkv, dh, nblk = 2, 12, 8, 4, 16, 3
+    q = jnp.asarray(rng.normal(size=(b, hkv * 2, dh)), jnp.float32)
+    k_pool, v_pool = _pool_state(rng, num_pages, ps, hkv, dh, jnp.float32)
+    bt = np.asarray([[0, 1, 2], [3, 4, -1]], np.int32)
+    lens = np.asarray([20, 11], np.int32)
+    outs = [np.asarray(ops.paged_attention(
+        q, k_pool, v_pool, jnp.asarray(bt), jnp.asarray(lens), bh=bh))
+        for bh in (1, 2, 4)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], rtol=1e-6, atol=1e-6)
+
+
+def test_fetched_page_counts_match_live_pages():
+    """The index-map replay (shared kv_block_index — what serving_bench
+    asserts on) issues exactly the live pages: ceil(len/ps) for active
+    rows, the single clamped slack page for inactive ones, and only the
+    in-window pages under a sliding window."""
+    from repro.kernels.paged_attention import fetched_page_counts
+    ps = 8
+    bt = np.asarray([[3, 7, 1, -1],      # 17 live tokens -> 3 pages
+                     [0, -1, -1, -1],    # 8 live -> 1 page
+                     [2, 4, 5, 9],       # 32 live -> 4 pages
+                     [-1, -1, -1, -1]],  # inactive -> 1 clamped page
+                    np.int32)
+    lens = np.asarray([17, 8, 32, 0], np.int32)
+    np.testing.assert_array_equal(
+        fetched_page_counts(bt, lens, ps), [3, 1, 4, 1])
+    # sliding window 8 over 32 live tokens: pages below the window
+    # start clamp onto the first in-window page -> 2 fetches at most
+    # (window spans positions 24..31 = page 3, plus the clamp target)
+    win = fetched_page_counts(bt, lens, ps, window=8)
+    assert win[2] <= 2
+    # every row obeys the serving_bench gate: pages*ps <= live + ps
+    for fetched, live in zip(fetched_page_counts(bt, lens, ps), lens):
+        assert fetched * ps <= live + ps
+
+
+# ---------------------------------------------------------------------------
+# Autotuned KV tiles
+# ---------------------------------------------------------------------------
+def test_choose_paged_blocks():
+    c = autotune.choose_paged_blocks(8, 4, 128, 16)
+    assert c is not None and 8 % c.bh == 0
+    assert c.vmem_bytes <= autotune.VMEM_BUDGET
+    assert c.kv_bytes_per_token == 2 * 8 * 128 * 2
+    # plenty of VMEM at serving shapes: all kv heads in one block
+    assert c.bh == 8
+    # a starved budget still degrades to bh=1 before giving up
+    tight = autotune.choose_paged_blocks(8, 4, 128, 16,
+                                         vmem_budget=1 << 16)
+    assert tight is None or tight.bh <= c.bh
+    assert autotune.choose_paged_blocks(0, 4, 128, 16) is None
+
+
+def test_paged_read_bytes_page_slack():
+    """The cost-model contract serving_bench asserts: whole-page reads
+    cost at most one page of slack past the live tokens."""
+    per_tok = autotune.paged_kv_bytes_per_token(4, 64)
+    for n in (1, 15, 16, 17, 100):
+        got = autotune.paged_read_bytes(n, 16, 4, 64)
+        assert got >= n * per_tok
+        assert got <= (n + 16) * per_tok
+
+
+# ---------------------------------------------------------------------------
+# Layer-level dispatch and the fully-inactive short-circuit
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def subject():
+    cfg = registry.get("tiny-lm").reduced()
+    params = M.init_params(cfg, PAR, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _to_f32(tree):
+    return jax.tree.map(
+        lambda a: a.astype(jnp.float32) if a.dtype == jnp.bfloat16 else a,
+        tree)
+
+
+def _paged_state(cfg, n_slots=2, num_pages=16, ps=8, dtype=jnp.float32):
+    caches = M.init_paged_caches(cfg, PAR, n_slots, num_pages, ps)
+    from repro.models.param import materialize
+    caches = materialize(caches, jax.random.PRNGKey(1))
+    if dtype == jnp.float32:
+        caches = _to_f32(caches)
+    return caches
+
+
+def test_decode_step_paged_kernel_matches_xla(subject, rng):
+    """Whole-model one-step parity: kernel vs XLA-gather reference on
+    identical pool state (f32 so the comparison is tight)."""
+    cfg, params = subject
+    params = _to_f32(params)
+    caches = _paged_state(cfg)
+    caches = jax.tree.map(
+        lambda a: jnp.asarray(rng.normal(size=a.shape) * 0.3, a.dtype)
+        if a.ndim >= 4 else a, caches)
+    bt = np.asarray([[0, 1, -1, -1, -1, -1, -1, -1],
+                     [2, 3, 4, -1, -1, -1, -1, -1]], np.int32)
+    lens = np.asarray([10, 19], np.int32)
+    tok = jnp.asarray(rng.integers(1, cfg.vocab, size=2), jnp.int32)
+    pos = jnp.asarray(lens - 1)
+    args = (params, tok, pos, caches, jnp.asarray(bt), jnp.asarray(lens))
+    lk, ck = M.decode_step_paged(cfg, PAR, *args, max_seq=64,
+                                 use_kernel=True)
+    lx, cx = M.decode_step_paged(cfg, PAR, *args, max_seq=64,
+                                 use_kernel=False)
+    np.testing.assert_allclose(np.asarray(lk, np.float32),
+                               np.asarray(lx, np.float32),
+                               rtol=1e-4, atol=1e-4)
+    # both paths scatter the same new K/V
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), ck, cx)
+
+
+@pytest.mark.parametrize("use_kernel", [True, False])
+def test_decode_step_paged_inactive_short_circuit(subject, rng, use_kernel):
+    """Every block-table row -1 (no slot owns a page): the stage walk is
+    skipped on device — caches come back untouched and the logits are
+    finite (regression: the reference used to gather + mask a fully
+    dense (B, nblk*ps) context for nothing)."""
+    cfg, params = subject
+    caches = _paged_state(cfg, dtype=jnp.bfloat16)
+    bt = np.full((2, 8), -1, np.int32)
+    lens = np.zeros((2,), np.int32)
+    tok = jnp.asarray(rng.integers(1, cfg.vocab, size=2), jnp.int32)
+    pos = jnp.zeros((2,), jnp.int32)
+    logits, new_caches = M.decode_step_paged(
+        cfg, PAR, params, tok, pos, caches, jnp.asarray(bt),
+        jnp.asarray(lens), max_seq=64, use_kernel=use_kernel)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), caches, new_caches)
+
+
+# ---------------------------------------------------------------------------
+# Engine-level greedy identity (kernel on vs off)
+# ---------------------------------------------------------------------------
+def _f32_engine(cfg, params, **kw):
+    eng = Engine(cfg, PAR, params, n_slots=2, max_seq=64,
+                 prefill_buckets=(16, 32), paged=True, page_size=8, **kw)
+    eng.backend.caches = _to_f32(eng.backend.caches)
+    return eng
+
+
+@pytest.mark.parametrize("tight_pool", [False, True])
+def test_engine_greedy_kernel_vs_xla_identical(subject, tight_pool):
+    """Acceptance: greedy tokens through the flash-decode kernel are
+    IDENTICAL to the XLA-gather reference engine — including through
+    pool exhaustion, preemption and full-context resume (tight pool).
+    f32 end-to-end; see module docstring for why bf16 can't carry a
+    token-identity claim on an untrained subject."""
+    cfg, params = subject
+    params = _to_f32(params)
+    local = np.random.default_rng(0)
+    if tight_pool:
+        prompts = [local.integers(1, cfg.vocab, size=13).astype(np.int32)
+                   for _ in range(3)]
+        kw = dict(pool_pages=6)
+        max_new = 20
+    else:
+        prompts = [local.integers(1, cfg.vocab, size=n).astype(np.int32)
+                   for n in (4, 9, 13, 7, 21)]
+        kw = {}
+        max_new = 6
+
+    def run(kernel):
+        eng = _f32_engine(cfg, params, paged_kernel=kernel, **kw)
+        reqs = [eng.submit(p, max_new=max_new) for p in prompts]
+        eng.run()
+        assert all(r.done for r in reqs)
+        return [r.out_tokens for r in reqs], sum(r.preemptions
+                                                 for r in reqs)
+    toks_k, pre_k = run(True)
+    toks_x, pre_x = run(False)
+    assert toks_k == toks_x
+    if tight_pool:
+        assert pre_k >= 1 and pre_k == pre_x
+
+
+def test_engine_greedy_kernel_vs_xla_hybrid_window(rng):
+    """The sliding-window kernel branch through the FULL dispatch stack
+    (engine → stage_step_paged → attention_decode_paged kernel path):
+    recurrentgemma's local-attention blocks carry window=_kind_window
+    into the kernel, interleaved with per-slot recurrent state.  The
+    workload pushes contexts to 44 tokens against local_window=32, so
+    the window mask BINDS and the below-window page-skip clamp
+    (first > 0) runs, not just the causal tail.  f32 end-to-end,
+    kernel vs XLA reference — greedy tokens identical."""
+    cfg = registry.get("recurrentgemma-2b").reduced()
+    assert cfg.local_window == 32
+    params = _to_f32(M.init_params(cfg, PAR, jax.random.PRNGKey(0)))
+    local = np.random.default_rng(0)
+    prompts = [local.integers(1, cfg.vocab, size=n).astype(np.int32)
+               for n in (30, 11, 37)]      # 37 truncates to the 32 bucket
+
+    def run(kernel):
+        eng = _f32_engine(cfg, params, paged_kernel=kernel)
+        reqs = [eng.submit(p, max_new=12) for p in prompts]
+        eng.run()
+        assert all(r.done for r in reqs)
+        return [r.out_tokens for r in reqs]
+
+    assert run(True) == run(False)
+
+
+def test_engine_context_lens_follow_slots(subject, rng):
+    """BlockTables.context_lens is the kernel's scalar-prefetch length
+    operand: pos+1 while a slot decodes, 0 once released."""
+    cfg, params = subject
+    eng = Engine(cfg, PAR, params, n_slots=2, max_seq=64,
+                 prefill_buckets=(16, 32), paged=True, page_size=8)
+    r = eng.submit(rng.integers(1, cfg.vocab, size=9).astype(np.int32),
+                   max_new=3)
+    eng.step()
+    # lens was fixed at pos+1 for the write this tick performed; pos has
+    # since advanced past it, so a live slot reads lens == pos
+    lens = eng.backend.tables.context_lens()
+    assert lens[0] == eng.pos[0] > 0       # live slot
+    assert lens[1] == 0                    # empty slot
+    eng.run()
+    assert r.done
+    assert (eng.backend.tables.context_lens() == 0).all()

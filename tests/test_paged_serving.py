@@ -134,14 +134,22 @@ def test_paged_matches_contiguous_greedy(subject):
     contiguous decode and the unrolled paged decode for *some* prompt
     sets; this seed is a verified tie-free workload, which is exactly
     the regime the equivalence claim is about (see the analogous caveat
-    in test_runtime.test_engine_greedy_matches_decode_reference)."""
+    in test_runtime.test_engine_greedy_matches_decode_reference).
+
+    paged_kernel=False: this test's claim is the paged BOOKKEEPING
+    (block tables, splice, masks) against the contiguous oracle, so both
+    sides must share the XLA attention numerics — the flash-decode
+    kernel rounds differently at the bf16 ulp and is held to greedy
+    identity on its own margin-verified workload in
+    test_paged_attention.py."""
     cfg, _ = subject
     local = np.random.default_rng(0)
     prompts = [local.integers(1, cfg.vocab, size=n).astype(np.int32)
                for n in (4, 9, 13, 7, 21)]
 
     def run(paged):
-        eng = make_engine(subject, paged=paged, page_size=8)
+        eng = make_engine(subject, paged=paged, page_size=8,
+                          paged_kernel=False)
         reqs = [eng.submit(p, max_new=6) for p in prompts]
         eng.run()
         assert all(r.done for r in reqs)
@@ -296,7 +304,12 @@ def test_max_new_limits_respected(subject, rng):
 def test_paged_matches_contiguous_hybrid_arch():
     """Recurrent (rglru) + sliding-window (local) blocks through the
     paged engine: recurrent state splices per-slot, windowed attention
-    masks stale pages — tokens must match the contiguous backend."""
+    masks stale pages — tokens must match the contiguous backend.
+
+    paged_kernel=False for the same reason as
+    test_paged_matches_contiguous_greedy: shared XLA numerics isolate
+    the bookkeeping claim; kernel-vs-reference identity (incl. the
+    sliding window) lives in test_paged_attention.py."""
     cfg = registry.get("recurrentgemma-2b").reduced()
     params = M.init_params(cfg, PAR, jax.random.PRNGKey(0))
     local = np.random.default_rng(0)
@@ -305,7 +318,8 @@ def test_paged_matches_contiguous_hybrid_arch():
 
     def run(paged):
         eng = Engine(cfg, PAR, params, n_slots=2, max_seq=64,
-                     prefill_buckets=(16, 32), paged=paged, page_size=8)
+                     prefill_buckets=(16, 32), paged=paged, page_size=8,
+                     paged_kernel=False)
         reqs = [eng.submit(p, max_new=4) for p in prompts]
         eng.run()
         assert all(r.done for r in reqs)
