@@ -83,15 +83,40 @@ def mixed_matmul(x: jax.Array, q, *, pre_permuted: bool = False) -> jax.Array:
     return y.reshape(lead + (q.n,)).astype(x.dtype)
 
 
-def paged_attention_blocks(ps: int, hkv: int, rep: int, dh: int):
+LANE = 128      # TPU register-tile lane width (last-dim tiling floor)
+
+
+def padded_head_dim(dh: int) -> int:
+    """Head dim the paged KV *pool* allocates for a logical ``dh``.
+
+    On a real TPU the flash-decode kernel's K/V page tiles must land on
+    the 128-lane register tiling, so pools for archs with
+    ``dh % 128 != 0`` are rounded up and the tail zero-padded — exact,
+    because zero lanes add nothing to q·k (contraction dim) and the
+    padded output columns are sliced off before the output projection.
+    Interpret mode keeps the logical dh (no constraint, no memory tax);
+    tests monkeypatch this to exercise the padded layout on CPU."""
+    if INTERPRET or dh % LANE == 0:
+        return dh
+    return ((dh + LANE - 1) // LANE) * LANE
+
+
+def paged_attention_blocks(ps: int, hkv: int, rep: int, dh: int,
+                           pool_dh: int = None):
     """Feasibility gate for the paged flash-decode kernel: the
     autotuned KV-tile choice, or None when the kernel cannot serve the
     shape and the caller must keep the XLA-gather reference path.  On a
-    real TPU backend the pool layout must also respect the MXU/VPU
-    tiling floors; interpret mode has no such constraint."""
-    if not INTERPRET and (dh % 128 != 0 or ps % 8 != 0):
+    real TPU backend the pool layout must respect the MXU/VPU tiling
+    floors — ``dh`` misalignment is absorbed by the pool's padded head
+    dim (:func:`padded_head_dim`; ``pool_dh`` is the pool's actual last
+    dim when the caller holds the cache), leaving only the page-size
+    sublane floor; interpret mode has no such constraint."""
+    pool_dh = padded_head_dim(dh) if pool_dh is None else pool_dh
+    if pool_dh < dh:
         return None
-    return autotune.choose_paged_blocks(hkv, rep, dh, ps)
+    if not INTERPRET and (pool_dh % LANE != 0 or ps % 8 != 0):
+        return None
+    return autotune.choose_paged_blocks(hkv, rep, pool_dh, ps)
 
 
 def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
@@ -106,5 +131,5 @@ def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
 
 
 __all__ = ["binary_matmul", "int4_matmul", "mixed_matmul",
-           "paged_attention", "paged_attention_blocks", "INTERPRET",
-           "autotune"]
+           "paged_attention", "paged_attention_blocks",
+           "padded_head_dim", "LANE", "INTERPRET", "autotune"]

@@ -41,6 +41,13 @@ the engine.
 ``repro.models.layers.attention_decode_paged`` dispatches here behind a
 feasibility check (mirroring ``ops.mixed_matmul``) and keeps the XLA
 gather as the fallback/reference path.
+
+**Head-dim padding**: pools for archs whose ``dh`` is off the 128-lane
+TPU tile are allocated at ``ops.padded_head_dim(dh)`` with zero-padded
+tails, so the kernel serves them instead of punting to the dense
+gather.  The wrapper zero-pads q into the pool tile (zero lanes add
+nothing to q·k), keeps the softmax scale at 1/sqrt(dh_logical), and
+slices the padded output columns off — exact by construction.
 """
 from __future__ import annotations
 
@@ -110,7 +117,7 @@ def _fetched_page_counts_dev(bt_flat, lens, *, ps, nblk, window):
 
 
 def _kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
-            acc_ref, *, ps, nblk, dh, window, softcap):
+            acc_ref, *, ps, nblk, sm_scale, window, softcap):
     b = pl.program_id(0)
     j = pl.program_id(2)
 
@@ -135,7 +142,11 @@ def _kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
         s = jax.lax.dot_general(            # (bh, rep, ps)
             q, k, (((2,), (2,)), ((0,), (1,))),
             preferred_element_type=jnp.float32)
-        s = s.astype(jnp.float32) / math.sqrt(dh)
+        # sm_scale is 1/sqrt(dh_logical) — the LOGICAL head dim, not the
+        # (possibly lane-padded) pool tile dim: padded lanes are zero in
+        # q so they add nothing to the dot, but they must not inflate
+        # the softmax temperature
+        s = s.astype(jnp.float32) * sm_scale
         if softcap is not None:
             s = softcap * jnp.tanh(s / softcap)
         kp = j * ps + jax.lax.broadcasted_iota(jnp.int32, (1, 1, ps), 2)
@@ -169,29 +180,42 @@ def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
                     interpret: bool = True) -> jax.Array:
     """Flash-decode over pool pages.
 
-    q (B, hq, dh); k_pool/v_pool (P, ps, hkv, dh); block_tables (B, nblk)
-    int32 page ids (-1 = unassigned); context_lens (B,) int32 live tokens
-    per request (0 = inactive row -> zero output).  Returns (B, hq, dh)
-    f32.  ``bh`` (kv heads per block) defaults to the autotuner's pick.
+    q (B, hq, dh); k_pool/v_pool (P, ps, hkv, dh_pool); block_tables
+    (B, nblk) int32 page ids (-1 = unassigned); context_lens (B,) int32
+    live tokens per request (0 = inactive row -> zero output).  Returns
+    (B, hq, dh) f32.  ``bh`` (kv heads per block) defaults to the
+    autotuner's pick.
+
+    ``dh_pool`` may exceed q's logical ``dh`` (lane-padded pools for
+    archs with ``dh`` off the 128-lane TPU tile —
+    ``ops.padded_head_dim``): q is zero-padded into the pool tile, the
+    softmax scale stays 1/sqrt(dh_logical), and the padded output
+    columns are sliced off — exact, since zero q lanes contribute
+    nothing to q·k and the padded V columns never survive the slice.
     """
     b, hq, dh = q.shape
-    num_pages, ps, hkv, _ = k_pool.shape
+    num_pages, ps, hkv, dh_pool = k_pool.shape
     nblk = block_tables.shape[1]
     rep = hq // hkv
     if hq % hkv:
         raise ValueError(f"hq={hq} not a multiple of hkv={hkv}")
+    if dh_pool < dh:
+        raise ValueError(f"pool head dim {dh_pool} < query head dim {dh}")
+    sm_scale = 1.0 / math.sqrt(dh)
+    if dh_pool > dh:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, dh_pool - dh)))
     if bh is None:
-        choice = autotune.choose_paged_blocks(hkv, rep, dh, ps)
+        choice = autotune.choose_paged_blocks(hkv, rep, dh_pool, ps)
         if choice is None:
             raise ValueError(
                 f"no feasible paged-attention blocks for (hkv, rep, dh, ps)"
-                f"=({hkv}, {rep}, {dh}, {ps}); route through "
+                f"=({hkv}, {rep}, {dh_pool}, {ps}); route through "
                 f"repro.models.layers.attention_decode_paged for the XLA "
                 f"fallback")
         bh = choice.bh
     if hkv % bh:
         raise ValueError(f"bh={bh} must divide hkv={hkv}")
-    qg = q.reshape(b, hkv, rep, dh)
+    qg = q.reshape(b, hkv, rep, dh_pool)
     grid = (b, hkv // bh, nblk)
 
     def q_map(bi, hg, j, bt, lens):
@@ -207,23 +231,23 @@ def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
         num_scalar_prefetch=2,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, bh, rep, dh), q_map),
-            pl.BlockSpec((1, ps, bh, dh), kv_map),
-            pl.BlockSpec((1, ps, bh, dh), kv_map),
+            pl.BlockSpec((1, bh, rep, dh_pool), q_map),
+            pl.BlockSpec((1, ps, bh, dh_pool), kv_map),
+            pl.BlockSpec((1, ps, bh, dh_pool), kv_map),
         ],
-        out_specs=pl.BlockSpec((1, bh, rep, dh), q_map),
+        out_specs=pl.BlockSpec((1, bh, rep, dh_pool), q_map),
         scratch_shapes=[
-            pltpu.VMEM((bh, rep, 1), jnp.float32),   # running max
-            pltpu.VMEM((bh, rep, 1), jnp.float32),   # running denom
-            pltpu.VMEM((bh, rep, dh), jnp.float32),  # weighted-V acc
+            pltpu.VMEM((bh, rep, 1), jnp.float32),       # running max
+            pltpu.VMEM((bh, rep, 1), jnp.float32),       # running denom
+            pltpu.VMEM((bh, rep, dh_pool), jnp.float32),  # weighted-V acc
         ],
     )
     out = pl.pallas_call(
-        functools.partial(_kernel, ps=ps, nblk=nblk, dh=dh, window=window,
-                          softcap=softcap),
+        functools.partial(_kernel, ps=ps, nblk=nblk, sm_scale=sm_scale,
+                          window=window, softcap=softcap),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, hkv, rep, dh), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, rep, dh_pool), jnp.float32),
         interpret=interpret,
     )(block_tables.reshape(-1).astype(jnp.int32),
       context_lens.astype(jnp.int32), qg, k_pool, v_pool)
-    return out.reshape(b, hq, dh)
+    return out.reshape(b, hq, dh_pool)[..., :dh]

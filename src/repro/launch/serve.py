@@ -7,17 +7,39 @@ Weights are quantized data-free (fast path) or with the full calibrated
 pipeline (--calibrated).  ``--kernel`` dispatches the fused Pallas
 mixed_matmul (interpret mode on CPU) instead of the XLA dequant path.
 ``--paged`` serves from the paged KV cache (block-table allocator +
-FCFS/preemption scheduler; see repro.runtime.paged_cache) with
+priority-class/preemption scheduler; see repro.runtime.paged_cache) with
 ``--page-size`` tokens per page and a ``--pool-pages`` global budget;
 paged decode attention runs through the Pallas flash-decode kernel on
 feasible shapes (``--no-paged-kernel`` pins the XLA dense-gather
-reference path).  Engine metrics (tokens/s, TTFT, queue depth, page
-utilization) are included in the JSON output either way.
+reference path).
+
+Event-loop extras (this is the end-to-end demo of the engine's typed
+event API):
+
+  * ``--stream`` drives ``Engine.tick()`` directly and prints every
+    ``TokenEvent`` the tick it is emitted (rid, output index, token) —
+    no buffering until completion.
+  * ``--cancel-after-s N`` cancels the longest-running in-flight
+    request (earliest admitted, still decoding) once N seconds of
+    serving have elapsed; the JSON output records the cancelled rids
+    and how many pool pages each cancellation freed (same tick).
+  * ``--priority a,b,c`` cycles the listed priority classes across the
+    submitted requests (weighted-deficit admission with aging:
+    realtime=8 / standard=4 / batch=1 by default); per-class TTFT/TBT
+    land in the engine-metrics JSON.
+  * ``--share-prefix`` enables copy-on-write prefix sharing
+    (``Engine(prefix_sharing=True)``) and gives all requests a common
+    page-aligned prompt prefix so the sharing is visible: the common
+    pages are allocated once, and the JSON carries the prefix-cache
+    counters (hits, pages attached instead of allocated, COW copies).
+
+Engine metrics (tokens/s, TTFT, TBT p50/p95 overall and per class,
+queue depth, page utilization) are included in the JSON output either
+way.
 """
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
 import time
 from typing import Any
@@ -35,8 +57,48 @@ from repro.data.synthetic import CorpusConfig, SyntheticCorpus
 from repro.models import model as M
 from repro.models.common import Parallel
 from repro.runtime.engine import Engine
+from repro.runtime.events import FinishEvent, TokenEvent
 
 Tree = Any
+
+
+def _drive(engine: Engine, *, stream: bool, cancel_after_s=None):
+    """Event-API consumer over ``Engine.run(on_tick=...)``: drain the
+    queue after every tick, print tokens when streaming, fire the demo
+    cancellation once its deadline passes.  Returns the cancellation
+    receipts.  The loop itself — stall guard, max_ticks runaway bound —
+    stays in the engine."""
+    q = engine.event_queue()
+    cancelled = []
+    state = {"did_cancel": False, "t0": time.time()}
+
+    def after_tick():
+        if cancel_after_s is not None and not state["did_cancel"] and \
+                time.time() - state["t0"] >= cancel_after_s:
+            active = engine.running()
+            if active:
+                # longest-running = earliest SUBMITTED still in a slot
+                # (admit_seq is re-stamped on preemption resumes; rid
+                # preserves the original order)
+                _, victim = min(active, key=lambda sr: sr[1].rid)
+                engine.cancel(victim.rid)
+                state["did_cancel"] = True
+        while q:
+            ev = q.popleft()
+            if isinstance(ev, TokenEvent) and stream:
+                print(f"[stream] rid={ev.rid} idx={ev.index} "
+                      f"tok={ev.token}", flush=True)
+            elif isinstance(ev, FinishEvent) and ev.reason == "cancelled":
+                cancelled.append({"rid": ev.rid, "tick": ev.tick,
+                                  "tokens_before_cancel": ev.n_tokens,
+                                  "freed_pages": ev.freed_pages})
+                if stream:
+                    print(f"[cancel] rid={ev.rid} freed_pages="
+                          f"{ev.freed_pages}", flush=True)
+
+    engine.run(on_tick=after_tick)
+    after_tick()        # events from the final tick's teardown
+    return cancelled
 
 
 def run(args):
@@ -74,25 +136,53 @@ def run(args):
               f"{rep['avg_bits_per_quantized_weight']:.3f} bits/weight over "
               f"{rep['quantized_weights']:,} weights")
 
+    if args.share_prefix and not args.paged:
+        raise SystemExit("--share-prefix requires --paged "
+                         "(sharing lives in the page allocator)")
     engine = Engine(cfg, par, qparams, n_slots=args.slots,
                     max_seq=args.max_seq,
                     prefill_buckets=(args.max_seq // 8, args.max_seq // 2),
                     paged=args.paged, page_size=args.page_size,
                     pool_pages=args.pool_pages,
                     paged_kernel=not args.no_paged_kernel,
+                    prefix_sharing=args.share_prefix,
                     fuse_projections=args.fused and args.quantize == "none")
 
+    classes = [c.strip() for c in args.priority.split(",") if c.strip()]
+    if not classes:
+        raise SystemExit("--priority needs at least one class name "
+                         "(e.g. --priority realtime,batch)")
+    for c in classes:
+        if not engine.scheduler.has_class(c):
+            raise SystemExit(f"unknown priority class {c!r}; configured: "
+                             f"{sorted(engine.scheduler.cfg.class_weights)}")
+
     rng = np.random.default_rng(args.seed)
+    # --share-prefix: a page-aligned common document prefix (half the
+    # prompt budget) + per-request unique tails — the sharing workload
+    common_len = 0
+    common = np.zeros((0,), np.int32)
+    if args.share_prefix:
+        common_len = (args.max_seq // 8) // args.page_size * args.page_size
+        common = corpus.document(9_999, max(common_len, args.page_size))
+        common_len = len(common)
     reqs = []
     for i in range(args.requests):
         plen = int(rng.integers(4, args.max_seq // 4))
-        prompt = corpus.document(10_000 + i, plen)
+        tail = corpus.document(10_000 + i, plen)
+        prompt = np.concatenate([common, tail]) if common_len else tail
         reqs.append(engine.submit(prompt, max_new=args.max_new,
                                   temperature=args.temperature,
-                                  deadline_s=args.deadline_s))
+                                  deadline_s=args.deadline_s,
+                                  priority=classes[i % len(classes)]))
 
     t0 = time.time()
-    engine.run()
+    if args.stream or args.cancel_after_s is not None:
+        cancelled = _drive(engine, stream=args.stream,
+                           cancel_after_s=args.cancel_after_s)
+    else:
+        engine.run()
+        cancelled = []      # nothing cancels on the plain run() path
     dt = time.time() - t0
     toks = sum(len(r.out_tokens) for r in reqs)
     out = {
@@ -101,9 +191,12 @@ def run(args):
         "wall_s": dt,
         "tokens_per_s": toks / max(dt, 1e-9),
         "all_done": all(r.done for r in reqs),
+        "cancelled": cancelled,
+        "priority_classes": classes,
         "quantize_mode": args.quantize,
         "quantize_s": t_quant,
         "cache_backend": engine.backend.name,
+        "prefix_sharing": engine.prefix_stats(),
         "engine_metrics": engine.metrics.snapshot(),
     }
     print(json.dumps(out, indent=2))
@@ -144,6 +237,20 @@ def parse_args(argv=None):
                    help="pin paged decode attention to the XLA-gather "
                         "reference path instead of the Pallas "
                         "flash-decode kernel")
+    p.add_argument("--stream", action="store_true",
+                   help="drive tick() directly and print every token "
+                        "the tick it is emitted (event API demo)")
+    p.add_argument("--cancel-after-s", type=float, default=None,
+                   help="after N seconds of serving, cancel the longest-"
+                        "running in-flight request (its pages free the "
+                        "same tick; receipts land in the JSON)")
+    p.add_argument("--priority", default="standard",
+                   help="comma list of priority classes cycled across "
+                        "requests (realtime/standard/batch)")
+    p.add_argument("--share-prefix", action="store_true",
+                   help="copy-on-write prefix sharing + a common page-"
+                        "aligned prompt prefix across requests (paged "
+                        "mode only)")
     p.add_argument("--deadline-s", type=float, default=None,
                    help="per-request admission deadline in seconds")
     p.add_argument("--max-seq", type=int, default=128)

@@ -337,8 +337,16 @@ def make_paged_cache(cfg: ArchConfig, par: Parallel, num_pages: int,
     decode mask derives key positions from block/slot indices.  Reused
     pages therefore need no clearing — stale slots are masked out by the
     new owner's context length.
+
+    The pool's head dim is ``ops.padded_head_dim(dh)``: on a real TPU,
+    archs whose ``dh`` is off the 128-lane tile get zero-padded pool
+    tiles so the flash-decode kernel can serve them instead of falling
+    back to the XLA dense gather.  Writers pad K/V to the pool width;
+    readers slice back to the logical ``dh`` (exact — see the kernel
+    wrapper's docstring).
     """
-    dh = cfg.head_dim_
+    from repro.kernels import ops
+    dh = ops.padded_head_dim(cfg.head_dim_)
     hkv = par.kv_heads_run(cfg.n_kv_heads, cfg.n_heads)
     shape = (n_layers, num_pages, page_size, hkv, dh)
     axes = ("layers", None, None, "kv_heads", None)
@@ -370,6 +378,10 @@ def scatter_pages(pool: Dict[str, jax.Array], k: jax.Array, v: jax.Array,
     the scatter — no host-side compaction needed.
     """
     num_pages, ps = pool["k"].shape[1], pool["k"].shape[2]
+    if k.shape[-1] < pool["k"].shape[-1]:    # lane-padded pool: pad tail
+        padw = ((0, 0),) * (k.ndim - 1) + \
+            ((0, pool["k"].shape[-1] - k.shape[-1]),)
+        k, v = jnp.pad(k, padw), jnp.pad(v, padw)
     t = positions.astype(jnp.int32)
     tc = jnp.clip(t, 0)
     blk = jnp.clip(tc // ps, 0, bt_row.shape[0] - 1)
@@ -417,20 +429,27 @@ def attention_decode_paged(cfg: ArchConfig, par: Parallel, p: Tree,
                            use_rope)
     num_pages, ps = cache["k"].shape[1], cache["k"].shape[2]
     nblk = block_tables.shape[1]
+    dh = k.shape[-1]
+    dh_pool = cache["k"].shape[-1]
+    kw, vw = k[:, 0], v[:, 0]
+    if dh_pool > dh:        # lane-padded pool (ops.padded_head_dim)
+        padw = ((0, 0), (0, 0), (0, dh_pool - dh))
+        kw, vw = jnp.pad(kw, padw), jnp.pad(vw, padw)
     # -- write the new token's K/V into its page ------------------------
     blk = jnp.clip(pos // ps, 0, nblk - 1)
     bi = jnp.arange(b)
     page = block_tables[bi, blk]                         # (B,)
     page = jnp.where(page >= 0, page, num_pages)         # OOR -> dropped
     slot = pos % ps
-    ck = cache["k"].at[layer, page, slot].set(k[:, 0], mode="drop")
-    cv = cache["v"].at[layer, page, slot].set(v[:, 0], mode="drop")
+    ck = cache["k"].at[layer, page, slot].set(kw, mode="drop")
+    cv = cache["v"].at[layer, page, slot].set(vw, mode="drop")
     new_cache = {"k": ck, "v": cv}
     # -- attend over this request's pages -------------------------------
     from repro.kernels import ops
     hkv = k.shape[2]
     hq = q.shape[2]
-    choice = (ops.paged_attention_blocks(ps, hkv, hq // hkv, q.shape[-1])
+    choice = (ops.paged_attention_blocks(ps, hkv, hq // hkv, dh,
+                                         pool_dh=dh_pool)
               if use_kernel and lengths is not None else None)
     if choice is not None:
         o = ops.paged_attention(q[:, 0], ck[layer], cv[layer],
@@ -439,8 +458,10 @@ def attention_decode_paged(cfg: ArchConfig, par: Parallel, p: Tree,
         o = o[:, None]                                   # (B, 1, hq, dh)
     else:
         bt = jnp.clip(block_tables, 0)                   # (B, nblk)
-        k_ctx = ck[layer][bt].reshape(b, nblk * ps, -1, ck.shape[-1])
-        v_ctx = cv[layer][bt].reshape(b, nblk * ps, -1, cv.shape[-1])
+        k_ctx = ck[layer][bt].reshape(b, nblk * ps, -1,
+                                      dh_pool)[..., :dh]
+        v_ctx = cv[layer][bt].reshape(b, nblk * ps, -1,
+                                      dh_pool)[..., :dh]
         kp = paged_key_positions(block_tables, ps)       # (B, nblk*ps)
         qp = pos[:, None, None]
         mask = jnp.logical_and(kp[:, None, :] <= qp, kp[:, None, :] >= 0)

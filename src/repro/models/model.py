@@ -213,16 +213,28 @@ def init_caches(cfg: ArchConfig, par: Parallel, batch: int, max_seq: int,
 # Paged serving path (block-table addressed KV pages)
 # ---------------------------------------------------------------------------
 def init_paged_caches(cfg: ArchConfig, par: Parallel, n_slots: int,
-                      num_pages: int, page_size: int) -> Tree:
+                      num_pages: int, page_size: int,
+                      dtype=None) -> Tree:
     """Abstract paged-cache declaration: attention KV lives in a shared
     (num_pages, page_size) pool per layer stack; recurrent state stays
-    per-slot.  Encoder–decoder archs keep static cross K/V per request
-    and are not paged (serve them on the contiguous path)."""
+    per-slot.  ``dtype`` overrides the bf16 pool default (f32 pools give
+    bit-exact shared-vs-unshared prefix tests a clean footing).
+    Encoder–decoder archs keep static cross K/V per request and are not
+    paged (serve them on the contiguous path)."""
     if cfg.enc_dec:
         raise NotImplementedError("paged serving does not support enc-dec")
     return tuple(T.init_stage_cache_paged(cfg, par, s, n_slots, num_pages,
-                                          page_size)
+                                          page_size, dtype=dtype)
                  for s in cfg.stages)
+
+
+def copy_pages(cfg: ArchConfig, caches: Tree, src, dst) -> Tree:
+    """Apply queued copy-on-write page copies: ``pool[dst] = pool[src]``
+    for every attention layer stack (recurrent per-slot state owns no
+    pages).  src/dst are (n,) int32 page-id vectors from
+    ``BlockTables.drain_copies``."""
+    return tuple(T.stage_copy_pages(cfg, stage, cs, src, dst)
+                 for stage, cs in zip(cfg.stages, caches))
 
 
 def decode_step_paged(cfg: ArchConfig, par: Parallel, params: Tree,

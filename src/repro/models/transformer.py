@@ -446,9 +446,25 @@ def stage_splice_paged(cfg: ArchConfig, stage: Stage, pool_stage: Tree,
     return tuple(out)
 
 
+def stage_copy_pages(cfg: ArchConfig, stage: Stage, pool_stage: Tree,
+                     src, dst) -> Tree:
+    """COW page copies for one stage: attention pools copy ``src`` page
+    rows onto ``dst`` across all layers at once; recurrent per-slot
+    state passes through untouched (it owns no pages)."""
+    out = []
+    for i, kind in enumerate(stage.pattern):
+        pool_i = pool_stage[i]
+        if kind in ATTN_KINDS:
+            out.append({"k": pool_i["k"].at[:, dst].set(pool_i["k"][:, src]),
+                        "v": pool_i["v"].at[:, dst].set(pool_i["v"][:, src])})
+        else:
+            out.append(pool_i)
+    return tuple(out)
+
+
 def init_stage_cache_paged(cfg: ArchConfig, par: Parallel, stage: Stage,
                            n_slots: int, num_pages: int,
-                           page_size: int) -> Tree:
+                           page_size: int, dtype=None) -> Tree:
     """Paged mirror of :func:`init_stage_cache`: attention blocks share
     the (num_pages, page_size) pool; recurrent blocks keep per-slot
     state at the decode batch size."""
@@ -456,7 +472,9 @@ def init_stage_cache_paged(cfg: ArchConfig, par: Parallel, stage: Stage,
     for kind in stage.pattern:
         if kind in ATTN_KINDS:
             c = L.make_paged_cache(cfg, par, num_pages, page_size,
-                                   stage.repeats)
+                                   stage.repeats,
+                                   **({} if dtype is None
+                                      else {"dtype": dtype}))
         else:
             c = stack_p(R.init_recurrent_state(cfg, kind, n_slots),
                         stage.repeats)

@@ -1,10 +1,24 @@
-"""Serving engine: batched prefill/decode over contiguous slots or paged KV.
+"""Serving engine: event-emitting tick loop over contiguous or paged KV.
 
 Continuous-batching slot model: a fixed decode batch of `n_slots`; each
 slot holds one request's cache and an independent position counter (the
 decode step takes a (B,) position vector, so ragged progress is native).
 New requests prefill (jitted, padded to `prefill_buckets`) and splice
 their cache in; finished slots free immediately.
+
+The engine is a **reentrant tick loop**, not a batch-and-drain box:
+:meth:`Engine.tick` advances every active slot by one decode step and
+publishes typed events (:mod:`repro.runtime.events`) the moment they
+happen — ``TokenEvent`` per sampled token, ``FinishEvent`` /
+``PreemptEvent`` / ``ExpireEvent`` on lifecycle edges — through a
+subscriber/queue bus (``Engine.subscribe`` / ``Engine.event_queue``).
+:meth:`Engine.run` is now just a convenience driver over ``tick()``;
+callers that stream (``launch/serve.py --stream``) drive ticks
+themselves and drain the queue in between.  :meth:`Engine.cancel`
+aborts a request wherever it is — queued requests leave the scheduler,
+in-flight requests give their slot and pages back **in the same tick**
+(the ``FinishEvent(reason="cancelled")`` carries the freed page count
+as the receipt).
 
 Two cache backends behind one interface:
 
@@ -14,22 +28,29 @@ Two cache backends behind one interface:
     through per-request block tables (`repro.runtime.paged_cache`), with
     the gather/scatter over page indices inside the jitted decode step.
     Memory scales with resident tokens; when the pool runs dry the
-    scheduler preempts a victim and re-queues it.
+    scheduler preempts a victim and re-queues it.  With
+    ``prefix_sharing=True`` the backend keeps a hash-keyed
+    :class:`~repro.runtime.paged_cache.PrefixCache`: requests whose
+    prompts share page-aligned prefix chunks attach to the existing
+    pool pages copy-on-write (refcounted fork) instead of allocating
+    and re-writing them — the common pages of N same-prompt requests
+    exist once.
 
-Admission/preemption policy lives in `repro.runtime.scheduler` (FCFS,
-deadlines, victim selection); serving counters in
-`repro.runtime.metrics`.  Weights may be fp (bf16) or PTQ1.61-quantized
-(QLinear pytrees) — the same jitted step serves both, which is the point
-of the paper-integrated runtime: sub-2-bit weights cut the decode
-weight-traffic term ~10× (EXPERIMENTS.md §Roofline), which is exactly
-why the KV cache, not the weights, becomes the serving bottleneck.
+Admission/preemption policy lives in `repro.runtime.scheduler` (weighted
+priority classes with an aging term, deadlines, class-aware victim
+selection); serving counters in `repro.runtime.metrics`.  Weights may be
+fp (bf16) or PTQ1.61-quantized (QLinear pytrees) — the same jitted step
+serves both, which is the point of the paper-integrated runtime: sub-2-bit
+weights cut the decode weight-traffic term ~10× (EXPERIMENTS.md
+§Roofline), which is exactly why the KV cache, not the weights, becomes
+the serving bottleneck.
 """
 from __future__ import annotations
 
 import functools
 import time
 from dataclasses import dataclass, field
-from typing import Any, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -40,10 +61,12 @@ from repro.models import model as M
 from repro.models import transformer as T
 from repro.models.common import Parallel
 from repro.models.param import materialize
+from repro.runtime.events import (EventBus, ExpireEvent, FinishEvent,
+                                  PreemptEvent, TokenEvent)
 from repro.runtime.metrics import EngineMetrics
-from repro.runtime.paged_cache import (BlockTables, PagePool,
+from repro.runtime.paged_cache import (BlockTables, PagePool, PrefixCache,
                                        pages_for_tokens)
-from repro.runtime.scheduler import Scheduler
+from repro.runtime.scheduler import DEFAULT_CLASS, Scheduler
 
 Tree = Any
 
@@ -54,9 +77,11 @@ class Request:
     prompt: np.ndarray                  # (S,) int32
     max_new: int = 32
     temperature: float = 0.0
+    priority: str = DEFAULT_CLASS
     out_tokens: List[int] = field(default_factory=list)
     done: bool = False
     expired: bool = False               # deadline passed while queued
+    cancelled: bool = False             # aborted via Engine.cancel
     preemptions: int = 0
     deadline_t: Optional[float] = None  # absolute (scheduler clock)
     admit_seq: int = 0                  # set by the scheduler on admit
@@ -97,15 +122,17 @@ class _ContiguousBackend:
     def page_util(self) -> Optional[float]:
         return None
 
-    def splice(self, slot: int, cache1: Tree, n_tokens: int) -> None:
+    def splice(self, slot: int, cache1: Tree, n_tokens: int,
+               seq: Optional[np.ndarray] = None,
+               shared: Optional[list] = None) -> None:
         self.caches = self._splice(self.caches, cache1,
                                    jnp.int32(slot))
 
     def ensure_capacity(self, slot: int, pos: int) -> bool:
         return True                      # region covers max_seq by design
 
-    def release(self, slot: int) -> None:
-        pass                             # region is reused on next splice
+    def release(self, slot: int) -> int:
+        return 0                         # region is reused on next splice
 
     def decode(self, params, toks, pos):
         logits, self.caches = self._decode(params, toks, pos, self.caches)
@@ -118,19 +145,28 @@ class _PagedBackend:
     name = "paged"
 
     def __init__(self, eng: "Engine", page_size: int, pool_pages: int,
-                 use_kernel: bool = True):
+                 use_kernel: bool = True, prefix_sharing: bool = False,
+                 cache_dtype=None):
         self.eng = eng
         max_blocks = pages_for_tokens(eng.max_seq, page_size)
         self.pool = PagePool(pool_pages, page_size)
         self.tables = BlockTables(self.pool, eng.n_slots, max_blocks)
+        self.prefix = PrefixCache(self.pool) if prefix_sharing else None
+        # admission-hint memo: rid -> matched pages, valid for one
+        # (registry writes, pool frees) version — a blocked head is
+        # hashed once, not once per tick, and splice reuses the pages
+        self._hint_cache: Dict[int, list] = {}
+        self._hint_ver = None
         cache_decl = M.init_paged_caches(eng.cfg, eng.par, eng.n_slots,
-                                         pool_pages, page_size)
+                                         pool_pages, page_size,
+                                         dtype=cache_dtype)
         self.caches = materialize(cache_decl, jax.random.PRNGKey(0))
         self._decode = jax.jit(functools.partial(
             M.decode_step_paged, eng.cfg, eng.par, max_seq=eng.max_seq,
             use_kernel=use_kernel))
         self._splice = jax.jit(functools.partial(
             M.splice_prefill_paged, eng.cfg))
+        self._copy = jax.jit(functools.partial(M.copy_pages, eng.cfg))
 
     @property
     def page_size(self) -> int:
@@ -142,21 +178,63 @@ class _PagedBackend:
     def page_util(self) -> Optional[float]:
         return self.pool.pages_in_use / self.pool.num_pages
 
-    def splice(self, slot: int, cache1: Tree, n_tokens: int) -> None:
+    def shared_page_hint(self, rid: int, seq: np.ndarray) -> int:
+        """Pages a prefix-cache attach would cover for ``seq`` right now
+        (admission accounting: the scheduler subtracts them from the
+        head's page need).  Registry state cannot change between this
+        hint and the attach in ``splice`` — both happen inside the same
+        host-side admission pass — so the matched pages are memoized by
+        rid and the splice reuses them instead of re-hashing the
+        prompt.  The memo survives across ticks until any registry
+        write or page free (either can only change match results when
+        it happens), so a queued head blocked on free pages does not
+        pay O(prompt) hashing per tick."""
+        if self.prefix is None:
+            return 0
+        ver = (self.prefix.writes, self.pool.free_events)
+        if ver != self._hint_ver:
+            self._hint_cache.clear()
+            self._hint_ver = ver
+        if rid not in self._hint_cache:
+            self._hint_cache[rid] = self.prefix.match(seq)
+        return len(self._hint_cache[rid])
+
+    def _apply_cow(self) -> None:
+        pairs = self.tables.drain_copies()
+        if pairs:
+            src = jnp.asarray([s for s, _ in pairs], jnp.int32)
+            dst = jnp.asarray([d for _, d in pairs], jnp.int32)
+            self.caches = self._copy(self.caches, src, dst)
+
+    def splice(self, slot: int, cache1: Tree, n_tokens: int,
+               seq: Optional[np.ndarray] = None,
+               shared: Optional[list] = None) -> None:
+        if self.prefix is not None and seq is not None:
+            if shared is None:      # no admission hint: match here
+                shared = self.prefix.match(seq)
+            self.prefix.count_attach(len(shared))
+            if shared:
+                self.tables.fork(slot, shared)
         ok = self.tables.ensure_blocks(
             slot, pages_for_tokens(n_tokens, self.page_size))
         assert ok, "admission must reserve prompt pages first"
-        bt_row = jnp.asarray(self.tables.as_array()[slot])
+        self._apply_cow()
+        # shared (forked) blocks are masked to -1: the device scatter
+        # drops those writes — the pages already hold these tokens' KV
+        bt_row = jnp.asarray(self.tables.writable_row(slot))
         self.caches = self._splice(self.caches, cache1, jnp.int32(slot),
                                    bt_row)
+        if self.prefix is not None and seq is not None:
+            self.prefix.register(seq, self.tables.owned(slot))
 
     def ensure_capacity(self, slot: int, pos: int) -> bool:
         return self.tables.ensure_for_position(slot, pos)
 
-    def release(self, slot: int) -> None:
-        self.tables.release(slot)
+    def release(self, slot: int) -> int:
+        return self.tables.release(slot)
 
     def decode(self, params, toks, pos):
+        self._apply_cow()
         bt = jnp.asarray(self.tables.as_array())
         lens = jnp.asarray(self.tables.context_lens())
         logits, self.caches = self._decode(params, toks, pos, self.caches,
@@ -174,6 +252,8 @@ class Engine:
                  paged: bool = False, page_size: int = 16,
                  pool_pages: Optional[int] = None,
                  paged_kernel: bool = True,
+                 prefix_sharing: bool = False,
+                 cache_dtype=None,
                  scheduler: Optional[Scheduler] = None,
                  metrics: Optional[EngineMetrics] = None,
                  fuse_projections: bool = False,
@@ -195,6 +275,7 @@ class Engine:
         self.key = jax.random.PRNGKey(seed)
         self.scheduler = scheduler or Scheduler()
         self.metrics = metrics or EngineMetrics()
+        self.events = EventBus()
 
         self.slot_req: List[Optional[Request]] = [None] * n_slots
         self.pos = np.zeros((n_slots,), np.int32)
@@ -210,14 +291,23 @@ class Engine:
             # flash-decode kernel on feasible shapes (default); False
             # pins the XLA-gather reference path (oracle / debugging)
             self.backend = _PagedBackend(self, page_size, pool_pages,
-                                         use_kernel=paged_kernel)
+                                         use_kernel=paged_kernel,
+                                         prefix_sharing=prefix_sharing,
+                                         cache_dtype=cache_dtype)
         else:
+            if prefix_sharing:
+                raise ValueError("prefix_sharing requires paged=True "
+                                 "(sharing lives in the page allocator)")
             self.backend = _ContiguousBackend(self)
 
         self._prefill = jax.jit(functools.partial(
             M.prefill, cfg, par, max_seq=max_seq))
         self._sample = jax.jit(_sample_batched)
         self._rid = 0
+        self._requests: Dict[int, Request] = {}
+        self._tick_no = 0
+        self._in_tick = False
+        self._pending_cancels: List[int] = []
         # per-phase timing: each jitted shape's FIRST call includes the
         # XLA compile and is recorded under "<phase>_compile" so the
         # "prefill"/"decode" series are pure steady-state step times.
@@ -241,28 +331,51 @@ class Engine:
         else:
             self._warm_shapes.add((phase, shape_key))
             self.metrics.on_phase_time(phase + "_compile", dt)
+            # compile wall time must not masquerade as an inter-token
+            # gap in the TBT series (it already shows up in TTFT)
+            self.metrics.on_stall()
         return out
+
+    # -- event API ------------------------------------------------------
+    def subscribe(self, cb):
+        """Register a callback for every engine event.  Callbacks run
+        inside ``tick()``; ``Engine.cancel`` called from one is deferred
+        to the end of the current tick (still the same tick)."""
+        return self.events.subscribe(cb)
+
+    def event_queue(self, maxlen: Optional[int] = None):
+        """A drainable event queue (collections.deque) — the streaming
+        consumer's API: drain with popleft() between ticks."""
+        return self.events.queue(maxlen)
+
+    def _emit(self, ev) -> None:
+        self.events.publish(ev)
 
     # ------------------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new: int = 32,
                temperature: float = 0.0,
-               deadline_s: Optional[float] = None) -> Request:
+               deadline_s: Optional[float] = None,
+               priority: str = DEFAULT_CLASS) -> Request:
         prompt = np.asarray(prompt, np.int32)
         # prompts longer than the largest prefill bucket are left-truncated
         # (keep the most recent tokens — standard serving behavior)
         if len(prompt) > self.max_prompt:
             prompt = prompt[-self.max_prompt:]
+        if not self.scheduler.has_class(priority):
+            raise ValueError(f"unknown priority class {priority!r}")
         self._rid += 1
         deadline_t = (self.scheduler.clock() + deadline_s
                       if deadline_s is not None else None)
         # page-need cap for admission: resumes keep full context up to
         # the decode ceiling (max_seq-1), not the fresh-prompt bucket cap
         r = Request(self._rid, prompt, max_new, temperature,
-                    deadline_t=deadline_t, prompt_cap=self.max_seq - 1)
+                    priority=priority, deadline_t=deadline_t,
+                    prompt_cap=self.max_seq - 1)
         if max_new <= 0:                     # degenerate: nothing to do
             r.done = True
-            self.metrics.on_submit(r.rid)
+            self.metrics.on_submit(r.rid, priority)
             self.metrics.on_finish(r.rid)
+            self._emit(FinishEvent(r.rid, "empty", 0, 0, self._tick_no))
             return r
         if isinstance(self.backend, _PagedBackend):
             # max_new >= 1 here (degenerate requests returned above), so
@@ -274,8 +387,13 @@ class Engine:
                 raise ValueError(
                     f"request needs {need} pages but the pool only has "
                     f"{self.backend.pool.num_pages}; grow --pool-pages")
+        # rid -> request, for cancel(); registered only once the request
+        # is truly accepted, and dropped at every terminal transition
+        # (finish/expire/cancel) so a long-running tick loop does not
+        # retain every request ever served
+        self._requests[r.rid] = r
         self.scheduler.enqueue(r)
-        self.metrics.on_submit(r.rid)
+        self.metrics.on_submit(r.rid, priority)
         return r
 
     def _bucket(self, s: int) -> int:
@@ -288,6 +406,16 @@ class Engine:
         # positions — one extra prefill compile, no truncation)
         return self.max_seq
 
+    def _context_seq(self, r: Request) -> np.ndarray:
+        """The token sequence a (re-)prefill of ``r`` must cover — the
+        prompt, plus for preemption resumes the already-generated tokens
+        minus the pending one (re-fed as the next decode input).  Also
+        what the prefix cache matches/registers against."""
+        if r.out_tokens:
+            return np.concatenate([r.prompt,
+                                   np.asarray(r.out_tokens[:-1], np.int32)])
+        return r.prompt
+
     # ------------------------------------------------------------------
     def _start(self, slot: int, r: Request) -> None:
         """(Re-)prefill `r` and occupy `slot`.
@@ -299,9 +427,7 @@ class Engine:
         it stopped.
         """
         resumed = bool(r.out_tokens)
-        seq = (np.concatenate([r.prompt,
-                               np.asarray(r.out_tokens[:-1], np.int32)])
-               if resumed else r.prompt)
+        seq = self._context_seq(r)
         # a resume seq is bounded by the decode ceiling (generation stops
         # at pos max_seq-1), so the full context always fits a bucket
         assert len(seq) <= self.max_seq - 1, (len(seq), self.max_seq)
@@ -317,7 +443,13 @@ class Engine:
                  "positions": jnp.asarray(positions)}
         logits, cache1 = self._timed(
             "prefill", b, lambda: self._prefill(self.params, batch))
-        self.backend.splice(slot, cache1, s)
+        be = self.backend
+        shared = None
+        if isinstance(be, _PagedBackend) and be.prefix is not None:
+            # the admission pass just matched this request's prefix; no
+            # free or registration can have happened since — reuse it
+            shared = be._hint_cache.pop(r.rid, None)
+        be.splice(slot, cache1, s, seq, shared)
         # this slot decodes at position s THIS tick, after the growth
         # pass already ran — admission reserved the page (prompt+1)
         ok = self.backend.ensure_capacity(slot, s)
@@ -331,10 +463,15 @@ class Engine:
                                                jnp.float32))[0])
             r.out_tokens.append(tok)
             self.metrics.on_token(r.rid)
+            self._emit(TokenEvent(r.rid, tok, len(r.out_tokens) - 1,
+                                  self._tick_no))
             if len(r.out_tokens) >= r.max_new:   # max_new=1: done at prefill
                 r.done = True
                 self.metrics.on_finish(r.rid)
-                self.backend.release(slot)
+                self._requests.pop(r.rid, None)
+                freed = self.backend.release(slot)
+                self._emit(FinishEvent(r.rid, "max_new", len(r.out_tokens),
+                                       freed, self._tick_no))
                 return
         self.slot_req[slot] = r
         self.pos[slot] = s
@@ -346,6 +483,14 @@ class Engine:
             r.expired = True
             r.done = True
             self.metrics.on_expire(r.rid)
+            self._requests.pop(r.rid, None)
+            self._emit(ExpireEvent(r.rid, self._tick_no))
+        shared_hint = None
+        if isinstance(self.backend, _PagedBackend) and \
+                self.backend.prefix is not None:
+            shared_hint = (lambda req:
+                           self.backend.shared_page_hint(
+                               req.rid, self._context_seq(req)))
         for slot in range(self.n_slots):
             # while, not if: a max_new=1 request finishes AT prefill and
             # leaves the slot free — keep admitting into it so a tick
@@ -353,7 +498,8 @@ class Engine:
             while self.slot_req[slot] is None:
                 r = self.scheduler.next_admissible(
                     self.backend.free_pages(),
-                    getattr(self.backend, "page_size", 1))
+                    getattr(self.backend, "page_size", 1),
+                    shared_pages=shared_hint)
                 if r is None:
                     return
                 self.metrics.on_admit(r.rid)
@@ -371,10 +517,12 @@ class Engine:
         r = self.slot_req[victim]
         r.preemptions += 1
         self.metrics.on_preempt(r.rid)
-        self.backend.release(victim)
+        freed = self.backend.release(victim)
         self.slot_req[victim] = None
-        # front of the queue: the victim becomes the longest-waiting
-        # request and is re-admitted first (no preemption starvation)
+        self._emit(PreemptEvent(r.rid, victim, freed, self._tick_no))
+        # front of its class queue: the victim becomes that class's
+        # longest-waiting request and is re-admitted first (no
+        # preemption starvation)
         self.scheduler.enqueue(r, front=True)
         return True
 
@@ -395,14 +543,97 @@ class Engine:
         return sub
 
     # ------------------------------------------------------------------
-    def step(self) -> bool:
-        """One batched decode tick across all active slots.
+    def cancel(self, rid: int) -> bool:
+        """Abort a request.  Queued requests leave the scheduler at
+        once; in-flight requests release their slot and return their
+        pages to the pool immediately — within the current tick when
+        called from an event callback (processing is deferred to the
+        tick's end so the decode loop is never mutated under itself).
+        Emits ``FinishEvent(reason="cancelled", freed_pages=...)``.
+        Returns False when the rid is unknown or already finished.
+
+        A *deferred* cancel (issued from inside a callback) returns
+        True optimistically: if the request reaches its natural finish
+        later in the same tick, the cancel becomes a no-op and the
+        terminal event is the natural ``FinishEvent`` (``max_new`` /
+        ``max_seq``), not a cancelled one — consumers must treat ANY
+        FinishEvent for the rid as terminal, never wait specifically
+        for ``reason="cancelled"``."""
+        r = self._requests.get(rid)
+        if r is None or r.done:
+            return False
+        if self._in_tick:
+            self._pending_cancels.append(rid)
+            return True
+        return self._do_cancel(rid)
+
+    def _do_cancel(self, rid: int) -> bool:
+        r = self._requests.get(rid)
+        if r is None or r.done:
+            return False
+        freed = 0
+        if self.scheduler.remove(rid) is None:
+            # not queued: must be in a slot
+            for slot, rr in enumerate(self.slot_req):
+                if rr is not None and rr.rid == rid:
+                    freed = self.backend.release(slot)
+                    self.slot_req[slot] = None
+                    break
+        r.done = True
+        r.cancelled = True
+        self.metrics.on_cancel(rid)
+        self._requests.pop(rid, None)
+        self._emit(FinishEvent(rid, "cancelled", len(r.out_tokens), freed,
+                               self._tick_no))
+        return True
+
+    def running(self) -> List[Tuple[int, Request]]:
+        """Active (slot, request) pairs, in slot order."""
+        return [(s, r) for s, r in enumerate(self.slot_req)
+                if r is not None]
+
+    @property
+    def has_work(self) -> bool:
+        return bool(len(self.scheduler)
+                    or any(r is not None for r in self.slot_req))
+
+    def prefix_stats(self):
+        """Prefix-cache counters (None unless prefix_sharing is on):
+        lookups/hits, pages attached instead of allocated (the pages
+        saved by sharing), tokens covered, live entries — plus the
+        tables' COW copy count."""
+        be = self.backend
+        if not isinstance(be, _PagedBackend) or be.prefix is None:
+            return None
+        st = be.prefix.stats()
+        return {"lookups": st.lookups, "hits": st.hits,
+                "pages_attached": st.pages_attached,
+                "tokens_shared": st.tokens_shared,
+                "entries": st.entries,
+                "cow_copies": be.tables.cow_copies,
+                "forked_pages": be.tables.forked_pages}
+
+    # ------------------------------------------------------------------
+    def tick(self) -> bool:
+        """One batched decode tick across all active slots; returns
+        False when nothing was running or admissible.
 
         Growth runs BEFORE admission: if running slots need pages, any
         preemption happens first, and only then is the freed capacity
         offered to the queue — admitting first would make the fresh
         request the newest (default victim) and throw away its entire
         prefill in the same tick."""
+        self._tick_no += 1
+        self._in_tick = True
+        try:
+            return self._tick_body()
+        finally:
+            self._in_tick = False
+            pending, self._pending_cancels = self._pending_cancels, []
+            for rid in pending:          # deferred from event callbacks:
+                self._do_cancel(rid)     # still "the same tick"
+
+    def _tick_body(self) -> bool:
         self._grow_caches()
         self._admit()
         if all(r is None for r in self.slot_req):
@@ -429,20 +660,35 @@ class Engine:
             self.metrics.on_token(r.rid)
             self.pos[slot] += 1
             self.cur_tok[slot] = tok
+            self._emit(TokenEvent(r.rid, tok, len(r.out_tokens) - 1,
+                                  self._tick_no))
+            # a cancel issued from an event callback is DEFERRED (see
+            # tick()'s finally), so r.done cannot flip under this loop
             if len(r.out_tokens) >= r.max_new or \
                     self.pos[slot] >= self.max_seq - 1:
+                reason = ("max_new" if len(r.out_tokens) >= r.max_new
+                          else "max_seq")
                 r.done = True
                 self.metrics.on_finish(r.rid)
-                self.backend.release(slot)
+                self._requests.pop(r.rid, None)
+                freed = self.backend.release(slot)
                 self.slot_req[slot] = None
+                self._emit(FinishEvent(r.rid, reason, len(r.out_tokens),
+                                       freed, self._tick_no))
         return True
 
-    def run(self, max_ticks: int = 10_000) -> None:
+    # back-compat alias: tick() is the reentrant primitive
+    step = tick
+
+    def run(self, max_ticks: int = 10_000, on_tick=None) -> None:
+        """Drive ticks until the queue and slots drain.  ``on_tick``
+        (no-arg callable) runs after every tick — streaming consumers
+        drain their event queue there (see launch/serve.py) without
+        re-implementing the loop, its stall guard, or the runaway
+        ``max_ticks`` bound."""
         ticks = 0
-        while (len(self.scheduler) or any(r is not None
-                                          for r in self.slot_req)) \
-                and ticks < max_ticks:
-            if not self.step():
+        while self.has_work and ticks < max_ticks:
+            if not self.tick():
                 # nothing admissible and nothing running: only possible
                 # when queued work cannot fit yet — avoid spinning
                 if not any(r is not None for r in self.slot_req) and \
@@ -450,6 +696,8 @@ class Engine:
                     raise RuntimeError(
                         "queued request can never be admitted "
                         "(pool too small for its prompt)")
+            if on_tick is not None:
+                on_tick()
             ticks += 1
 
 

@@ -2,10 +2,20 @@
 
 One :class:`EngineMetrics` instance rides along with an ``Engine``.  The
 engine reports lifecycle events (submit / admit / first token / finish /
-preempt / expire) and one gauge sample per decode tick; ``snapshot()``
-reduces them to the serving numbers that matter — tokens/s, time-to-first
--token, queue depth, page utilization — and ``to_json()`` exports them
-for the benchmark harness (``benchmarks/serving_bench.py``).
+preempt / expire / cancel) and one gauge sample per decode tick;
+``snapshot()`` reduces them to the serving numbers that matter — tokens/s,
+time-to-first-token, inter-token latency (TBT), queue depth, page
+utilization — and ``to_json()`` exports them for the benchmark harness
+(``benchmarks/serving_bench.py``).
+
+Now that the engine emits every token through the event bus the tick it
+is sampled, **inter-token latency is observable per request**: every
+``on_token`` after the first records the gap since the request's
+previous token, and ``snapshot()`` reduces the gaps to p50/p95 both
+overall and **per priority class** (``on_submit`` carries the class) —
+the per-class TTFT/TBT split is what makes the weighted-deficit
+scheduler's service shares visible in ``serving_bench``'s
+mixed-priority rows.
 
 The clock is injectable so tests can drive deterministic time.
 """
@@ -28,10 +38,14 @@ def _percentile(xs: List[float], q: float) -> float:
 @dataclass
 class _ReqTimes:
     submit_t: float
+    priority: str = "standard"
     admit_t: Optional[float] = None
     first_tok_t: Optional[float] = None
+    last_tok_t: Optional[float] = None
     finish_t: Optional[float] = None
     tokens: int = 0
+    tbt: List[float] = field(default_factory=list)  # inter-token gaps
+    stall_seen: int = 0         # on_stall() count at the last token
 
 
 class EngineMetrics:
@@ -39,8 +53,11 @@ class EngineMetrics:
         self.clock = clock
         self._req: Dict[int, _ReqTimes] = {}
         self._expired: set = set()
+        self._cancelled: set = set()
+        self._stalls = 0
         self.preemptions = 0
         self.expirations = 0
+        self.cancellations = 0
         self.ticks = 0
         self.prefills = 0
         self._start_t: Optional[float] = None
@@ -54,11 +71,11 @@ class EngineMetrics:
         self.phase_times: Dict[str, List[float]] = {}
 
     # -- lifecycle events ----------------------------------------------
-    def on_submit(self, rid: int) -> None:
+    def on_submit(self, rid: int, priority: str = "standard") -> None:
         now = self.clock()
         if self._start_t is None:
             self._start_t = now
-        self._req[rid] = _ReqTimes(submit_t=now)
+        self._req[rid] = _ReqTimes(submit_t=now, priority=priority)
 
     def on_admit(self, rid: int) -> None:
         t = self._req[rid]
@@ -72,7 +89,21 @@ class EngineMetrics:
         t = self._req[rid]
         if t.first_tok_t is None:
             t.first_tok_t = now
+        elif t.last_tok_t is not None and t.stall_seen == self._stalls:
+            # a gap spanning an on_stall() (XLA compile) is a one-time
+            # warmup artifact, not inter-token latency — drop it so
+            # tbt_p95 describes steady-state decode (TTFT still carries
+            # the first compile, as it should)
+            t.tbt.append(now - t.last_tok_t)
+        t.last_tok_t = now
+        t.stall_seen = self._stalls
         t.tokens += n
+
+    def on_stall(self) -> None:
+        """A one-time wall-clock stall (jit compile) happened: the next
+        inter-token gap of every in-flight request is not decode
+        latency and must not enter the TBT series."""
+        self._stalls += 1
 
     def on_finish(self, rid: int) -> None:
         self._req[rid].finish_t = self.clock()
@@ -84,6 +115,11 @@ class EngineMetrics:
         self.expirations += 1
         self._expired.add(rid)      # never served: kept out of completed
                                     # counts and latency percentiles
+
+    def on_cancel(self, rid: int) -> None:
+        self.cancellations += 1
+        self._cancelled.add(rid)    # partially served: tokens/TBT count,
+                                    # completion/latency do not
 
     def on_phase_time(self, phase: str, seconds: float) -> None:
         """Record one jitted step's wall time for ``phase``.  Decode runs
@@ -104,39 +140,64 @@ class EngineMetrics:
             self.page_util.append(page_util)
 
     # -- reduction ------------------------------------------------------
+    @staticmethod
+    def _latency_block(times: List["_ReqTimes"]) -> Dict:
+        ttft = [t.first_tok_t - t.submit_t for t in times
+                if t.first_tok_t is not None]
+        tbt = [g for t in times for g in t.tbt]
+        mean = lambda xs: sum(xs) / len(xs) if xs else 0.0
+        return {
+            "ttft_mean_s": mean(ttft),
+            "ttft_p50_s": _percentile(ttft, 0.50),
+            "ttft_p95_s": _percentile(ttft, 0.95),
+            "tbt_mean_s": mean(tbt),
+            "tbt_p50_s": _percentile(tbt, 0.50),
+            "tbt_p95_s": _percentile(tbt, 0.95),
+        }
+
     def snapshot(self) -> Dict:
         served = {rid: t for rid, t in self._req.items()
                   if rid not in self._expired}
-        ttft = [t.first_tok_t - t.submit_t for t in served.values()
-                if t.first_tok_t is not None]
-        lat = [t.finish_t - t.submit_t for t in served.values()
-               if t.finish_t is not None]
+        lat = [t.finish_t - t.submit_t for rid, t in served.items()
+               if t.finish_t is not None and rid not in self._cancelled]
         tokens = sum(t.tokens for t in self._req.values())
         wall = ((self._last_t - self._start_t)
                 if self._start_t is not None and self._last_t is not None
                 else 0.0)
         mean = lambda xs: sum(xs) / len(xs) if xs else 0.0
+        by_class: Dict[str, List[_ReqTimes]] = {}
+        for rid, t in served.items():
+            by_class.setdefault(t.priority, []).append(t)
+        per_class = {
+            cls: dict(
+                requests=len(ts),
+                completed=sum(1 for t in ts if t.finish_t is not None),
+                generated_tokens=sum(t.tokens for t in ts),
+                **self._latency_block(ts),
+            ) for cls, ts in sorted(by_class.items())
+        }
         return {
             "requests": len(self._req),
-            "completed": sum(1 for t in served.values()
-                             if t.finish_t is not None),
+            "completed": sum(1 for rid, t in served.items()
+                             if t.finish_t is not None
+                             and rid not in self._cancelled),
             "generated_tokens": tokens,
             "wall_s": wall,
             "tokens_per_s": tokens / max(wall, 1e-9),
-            "ttft_mean_s": mean(ttft),
-            "ttft_p50_s": _percentile(ttft, 0.50),
-            "ttft_p95_s": _percentile(ttft, 0.95),
+            **self._latency_block(list(served.values())),
             "latency_mean_s": mean(lat),
             "latency_p95_s": _percentile(lat, 0.95),
             "ticks": self.ticks,
             "prefills": self.prefills,
             "preemptions": self.preemptions,
             "expirations": self.expirations,
+            "cancellations": self.cancellations,
             "queue_depth_mean": mean(self.queue_depth),
             "queue_depth_max": max(self.queue_depth, default=0),
             "active_slots_mean": mean(self.active_slots),
             "page_util_mean": mean(self.page_util),
             "page_util_max": max(self.page_util, default=0.0),
+            "per_class": per_class,
             "phase_step_s": {
                 phase: {
                     "count": len(ts),

@@ -341,3 +341,78 @@ def test_engine_context_lens_follow_slots(subject, rng):
     eng.run()
     assert r.done
     assert (eng.backend.tables.context_lens() == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# Head-dim padding (lane-tile pools for dh off the 128 TPU tile)
+# ---------------------------------------------------------------------------
+def test_kernel_padded_pool_matches_unpadded(rng):
+    """A lane-padded pool (zero tails past the logical dh) produces the
+    same attention output as the unpadded layout: zero q lanes add
+    nothing to q·k, the softmax scale stays 1/sqrt(dh_logical), and the
+    padded output columns are sliced off."""
+    b, num_pages, ps, hkv, dh, nblk = 3, 12, 8, 2, 16, 4
+    q = jnp.asarray(rng.normal(size=(b, hkv * 2, dh)), jnp.float32)
+    k_pool, v_pool = _pool_state(rng, num_pages, ps, hkv, dh, jnp.float32)
+    bt = np.asarray([[3, 7, -1, -1],
+                     [0, 1, 2, 5],
+                     [-1, -1, -1, -1]], np.int32)
+    lens = np.asarray([13, 30, 0], np.int32)
+    out = np.asarray(ops.paged_attention(q, k_pool, v_pool,
+                                         jnp.asarray(bt),
+                                         jnp.asarray(lens)))
+    pad = ((0, 0), (0, 0), (0, 0), (0, 16))        # dh 16 -> 32 pool tile
+    out_p = np.asarray(ops.paged_attention(q, jnp.pad(k_pool, pad),
+                                           jnp.pad(v_pool, pad),
+                                           jnp.asarray(bt),
+                                           jnp.asarray(lens)))
+    assert out_p.shape == out.shape                # sliced back to dh
+    np.testing.assert_allclose(out_p, out, rtol=1e-6, atol=1e-6)
+    np.testing.assert_array_equal(out_p[2], 0.0)   # inactive row intact
+
+
+def test_padded_head_dim_policy_and_gate(monkeypatch):
+    """padded_head_dim rounds to the lane tile only off-tile and only on
+    real TPU backends; the feasibility gate accepts a padded pool for a
+    dh that would otherwise be rejected."""
+    assert ops.padded_head_dim(96) == 96           # interpret: no tax
+    monkeypatch.setattr(ops, "INTERPRET", False)
+    assert ops.padded_head_dim(128) == 128
+    assert ops.padded_head_dim(96) == 128
+    assert ops.padded_head_dim(200) == 256
+    # dh=96 alone fails the lane floor; with its padded pool it passes
+    assert ops.paged_attention_blocks(8, 2, 2, 96, pool_dh=96) is None
+    assert ops.paged_attention_blocks(8, 2, 2, 96, pool_dh=128) is not None
+    # a pool narrower than the query head dim is never feasible
+    monkeypatch.setattr(ops, "INTERPRET", True)
+    assert ops.paged_attention_blocks(8, 2, 2, 96, pool_dh=64) is None
+
+
+@pytest.mark.parametrize("use_kernel", [True, False])
+def test_engine_greedy_identical_with_padded_pools(subject, monkeypatch,
+                                                   use_kernel):
+    """End-to-end padded layout: force padded_head_dim to widen the pool
+    (as a real TPU would for tiny-lm's dh=32), serve a full workload
+    through BOTH read paths, and require greedy tokens identical to the
+    unpadded engine — writers pad, readers slice, nothing leaks."""
+    cfg, params = subject
+    params = _to_f32(params)
+    local = np.random.default_rng(0)
+    prompts = [local.integers(1, cfg.vocab, size=n).astype(np.int32)
+               for n in (4, 9, 13, 7, 21)]
+
+    def run(force_pad):
+        if force_pad:
+            monkeypatch.setattr(ops, "padded_head_dim",
+                                lambda dh: dh * 2)
+        else:
+            monkeypatch.setattr(ops, "padded_head_dim", lambda dh: dh)
+        eng = _f32_engine(cfg, params, paged_kernel=use_kernel)
+        dh_pool = eng.backend.caches[0][0]["k"].shape[-1]
+        assert dh_pool == cfg.head_dim_ * (2 if force_pad else 1)
+        reqs = [eng.submit(p, max_new=6) for p in prompts]
+        eng.run()
+        assert all(r.done for r in reqs)
+        return [r.out_tokens for r in reqs]
+
+    assert run(False) == run(True)
