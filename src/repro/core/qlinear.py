@@ -265,6 +265,15 @@ class QLinearGroup:
             return self.inner.__matmul_x__(x)
         return jnp.einsum("...k,kn->...n", x, self.inner.astype(x.dtype))
 
+    def __expert_matmul__(self, x: jax.Array) -> jax.Array:
+        """Fused per-expert forward: x (E, C, K) with stacked (E, …)
+        member weights -> (E, C, ΣN_i) — one batched matmul (and, when
+        quantized, one per-expert activation gather) for the whole
+        group, the MoE twin of the decode QKV/gate-up fusion."""
+        if hasattr(self.inner, "__expert_matmul__"):
+            return self.inner.__expert_matmul__(x)
+        return jnp.einsum("eck,ekn->ecn", x, self.inner.astype(x.dtype))
+
     def split_out(self, y: jax.Array) -> Tuple[jax.Array, ...]:
         """Slice a fused output back into per-member outputs."""
         return tuple(pack.split_cols(y, self.splits))

@@ -291,13 +291,85 @@ def _choose_paged_cached(hkv: int, rep: int, dh: int, ps: int,
     return None
 
 
+# ---------------------------------------------------------------------------
+# Paged-prefill kernel (chunked scatter+attend tiles)
+# ---------------------------------------------------------------------------
+# The chunked-prefill kernel keeps the whole chunk's queries and the
+# online-softmax scratch resident while streaming one KV page per grid
+# step, so its VMEM footprint scales with (bh, rep, C) instead of the
+# decode kernel's (bh, rep).  `bh` is again the only free dim; the model
+# picks the largest fitting one and exposes the per-chunk traffic terms
+# the serving bench accounts against (mirroring paged_read_bytes).
+
+
+def paged_prefill_vmem_bytes(bh: int, rep: int, dh: int, ps: int, c: int,
+                             kv_itemsize: int = 2,
+                             q_itemsize: int = 2) -> int:
+    """Per-step VMEM footprint of the chunked-prefill kernel:
+    double-buffered context K/V page tiles AND chunk K/V tiles, the
+    resident q block, the f32 output tile, and the (m, l, acc)
+    scratch."""
+    kv = 4 * ps * bh * dh * kv_itemsize          # ctx K/V + chunk K/V tiles
+    q = bh * rep * c * dh * q_itemsize
+    out = bh * rep * c * dh * 4
+    scratch = bh * rep * c * (dh + 2) * 4        # acc + m + l
+    return 2 * kv + q + out + scratch
+
+
+def paged_prefill_read_bytes(start: int, length: int, ps: int, hkv: int,
+                             dh: int, itemsize: int = 2) -> int:
+    """Modeled KV bytes ONE chunk call moves for a chunk at ``start``
+    with ``length`` live tokens: context pages stream in once, chunk
+    pages write once (whole pages, so at most one page of slack) — the
+    prefill mirror of :func:`paged_read_bytes`."""
+    ctx_pages = -(-max(int(start), 0) // ps)
+    chunk_pages = -(-max(int(length), 0) // ps)
+    return ((ctx_pages + chunk_pages) * ps
+            * paged_kv_bytes_per_token(hkv, dh, itemsize))
+
+
+@dataclass(frozen=True)
+class PagedPrefillChoice:
+    """KV-tile pick for one chunked-prefill call plus its cost terms."""
+    bh: int                    # kv heads per block
+    vmem_bytes: int
+    kv_bytes_per_token: int
+
+
+def choose_prefill_blocks(c: int, hkv: int, rep: int, dh: int, ps: int,
+                          vmem_budget: Optional[int] = None,
+                          ) -> Optional[PagedPrefillChoice]:
+    """Pick the kv-heads-per-block tile for a chunked-prefill shape, or
+    None when even bh=1 cannot fit (callers fall back to the XLA
+    dense-gather path).  Memoized like the other choosers — every chunk
+    of every prompt hits the same (C, hkv, rep, dh, ps) key."""
+    return _choose_prefill_cached(
+        c, hkv, rep, dh, ps,
+        VMEM_BUDGET if vmem_budget is None else vmem_budget)
+
+
+@functools.lru_cache(maxsize=1024)
+def _choose_prefill_cached(c: int, hkv: int, rep: int, dh: int, ps: int,
+                           vmem_budget: int) -> Optional[PagedPrefillChoice]:
+    if c <= 0 or hkv <= 0 or rep <= 0 or dh <= 0 or ps <= 0 or c % ps:
+        return None
+    for bh in _divisors(hkv, hkv):
+        vmem = paged_prefill_vmem_bytes(bh, rep, dh, ps, c)
+        if vmem <= vmem_budget:
+            return PagedPrefillChoice(bh, vmem,
+                                      paged_kv_bytes_per_token(hkv, dh))
+    return None
+
+
 def cache_info():
-    """Dispatch-cache stats for BOTH memoized choosers (matmul block
-    picks and paged-attention KV tiles)."""
+    """Dispatch-cache stats for the memoized choosers (matmul block
+    picks, paged-attention KV tiles, chunked-prefill tiles)."""
     return {"matmul": _choose_blocks_cached.cache_info(),
-            "paged_attention": _choose_paged_cached.cache_info()}
+            "paged_attention": _choose_paged_cached.cache_info(),
+            "paged_prefill": _choose_prefill_cached.cache_info()}
 
 
 def cache_clear() -> None:
     _choose_blocks_cached.cache_clear()
     _choose_paged_cached.cache_clear()
+    _choose_prefill_cached.cache_clear()

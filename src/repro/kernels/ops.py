@@ -27,6 +27,8 @@ from repro.kernels.binary_matmul import binary_matmul
 from repro.kernels.int4_matmul import int4_matmul
 from repro.kernels.mixed_matmul import mixed_matmul as _mixed
 from repro.kernels.paged_attention import paged_attention as _paged_attn
+from repro.kernels.paged_prefill import paged_prefill as _paged_prefill
+from repro.kernels.paged_prefill import paged_prefill_xla
 
 INTERPRET = jax.default_backend() != "tpu"
 
@@ -130,6 +132,35 @@ def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
                        interpret=INTERPRET)
 
 
+def paged_prefill_blocks(c: int, ps: int, hkv: int, rep: int, dh: int,
+                         pool_dh: int = None):
+    """Feasibility gate for the chunked paged-prefill kernel: the
+    autotuned KV-tile choice, or None when the kernel cannot serve the
+    shape and the caller must keep the XLA dense-gather fallback
+    (:func:`repro.kernels.paged_prefill.paged_prefill_xla`).  Same
+    tiling-floor rules as :func:`paged_attention_blocks`, plus the
+    chunk must tile evenly into pages."""
+    pool_dh = padded_head_dim(dh) if pool_dh is None else pool_dh
+    if pool_dh < dh or c % ps:
+        return None
+    if not INTERPRET and (pool_dh % LANE != 0 or ps % 8 != 0):
+        return None
+    return autotune.choose_prefill_blocks(c, hkv, rep, pool_dh, ps)
+
+
+def paged_prefill(q, k_new, v_new, k_pool, v_pool, bt_read, bt_write,
+                  start, length, *, layer, window=None, softcap=None,
+                  bh=None):
+    """Fused chunk scatter+attend (see kernels.paged_prefill); the
+    caller is expected to have consulted :func:`paged_prefill_blocks`
+    first — this wrapper only pins the interpret mode."""
+    return _paged_prefill(q, k_new, v_new, k_pool, v_pool, bt_read,
+                          bt_write, start, length, layer=layer,
+                          window=window, softcap=softcap, bh=bh,
+                          interpret=INTERPRET)
+
+
 __all__ = ["binary_matmul", "int4_matmul", "mixed_matmul",
            "paged_attention", "paged_attention_blocks",
+           "paged_prefill", "paged_prefill_blocks", "paged_prefill_xla",
            "padded_head_dim", "LANE", "INTERPRET", "autotune"]

@@ -139,6 +139,12 @@ def run(args):
     if args.share_prefix and not args.paged:
         raise SystemExit("--share-prefix requires --paged "
                          "(sharing lives in the page allocator)")
+    if args.chunked_prefill and not args.paged:
+        raise SystemExit("--chunked-prefill requires --paged "
+                         "(chunks scatter into pool pages)")
+    if args.prefix_retain and not args.share_prefix:
+        raise SystemExit("--prefix-retain requires --share-prefix "
+                         "(retention extends the prefix cache)")
     engine = Engine(cfg, par, qparams, n_slots=args.slots,
                     max_seq=args.max_seq,
                     prefill_buckets=(args.max_seq // 8, args.max_seq // 2),
@@ -146,6 +152,9 @@ def run(args):
                     pool_pages=args.pool_pages,
                     paged_kernel=not args.no_paged_kernel,
                     prefix_sharing=args.share_prefix,
+                    prefix_retain_pages=args.prefix_retain,
+                    chunked_prefill=args.chunked_prefill,
+                    prefill_chunk=args.prefill_chunk,
                     fuse_projections=args.fused and args.quantize == "none")
 
     classes = [c.strip() for c in args.priority.split(",") if c.strip()]
@@ -251,6 +260,19 @@ def parse_args(argv=None):
                    help="copy-on-write prefix sharing + a common page-"
                         "aligned prompt prefix across requests (paged "
                         "mode only)")
+    p.add_argument("--prefix-retain", type=int, default=0,
+                   help="retain up to N freed prefix pages in an LRU "
+                        "pool so late same-prefix requests still hit "
+                        "after their cohort finished (needs "
+                        "--share-prefix)")
+    p.add_argument("--chunked-prefill", action="store_true",
+                   help="advance prefills a chunk per tick, interleaved "
+                        "with decode (fused scatter+attend paged-"
+                        "prefill kernel; bounds the decode inter-token "
+                        "gap under long prompts; paged mode only)")
+    p.add_argument("--prefill-chunk", type=int, default=64,
+                   help="prompt tokens per prefill chunk (multiple of "
+                        "--page-size)")
     p.add_argument("--deadline-s", type=float, default=None,
                    help="per-request admission deadline in seconds")
     p.add_argument("--max-seq", type=int, default=128)

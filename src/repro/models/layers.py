@@ -344,11 +344,19 @@ def make_paged_cache(cfg: ArchConfig, par: Parallel, num_pages: int,
     back to the XLA dense gather.  Writers pad K/V to the pool width;
     readers slice back to the logical ``dh`` (exact — see the kernel
     wrapper's docstring).
+
+    One extra physical page beyond ``num_pages`` is allocated as the
+    **dump page**: the chunked-prefill kernel's fused scatter needs a
+    real write target for masked writes (shared/unassigned blocks,
+    ragged chunk tails) where the XLA scatter uses ``mode="drop"``.  No
+    block table ever references it (the allocator hands out ids
+    ``[0, num_pages)``), so its garbage is unreachable, and the XLA
+    paths' out-of-range sentinel ``num_pages + 1`` still drops.
     """
     from repro.kernels import ops
     dh = ops.padded_head_dim(cfg.head_dim_)
     hkv = par.kv_heads_run(cfg.n_kv_heads, cfg.n_heads)
-    shape = (n_layers, num_pages, page_size, hkv, dh)
+    shape = (n_layers, num_pages + 1, page_size, hkv, dh)
     axes = ("layers", None, None, "kv_heads", None)
     return {"k": P(shape, axes, "zeros", dtype),
             "v": P(shape, axes, "zeros", dtype)}
@@ -472,6 +480,63 @@ def attention_decode_paged(cfg: ArchConfig, par: Parallel, p: Tree,
     return dense(o, p["wo"]), new_cache
 
 
+def attention_prefill_paged(cfg: ArchConfig, par: Parallel, p: Tree,
+                            x: jax.Array, positions: jax.Array,
+                            cache: Tree, bt_read: jax.Array,
+                            bt_write: jax.Array, start, length, *,
+                            layer: int, window: Optional[int] = None,
+                            use_kernel: bool = True):
+    """One CHUNK of paged prefill for one request: project the chunk's
+    Q/K/V, write K/V straight into the request's pool pages and attend
+    the chunk queries against all previously-written context pages plus
+    the in-chunk causal prefix — fused in one kernel call, no dense
+    per-request prefill cache.
+
+    x: (1, C, D) the chunk's hidden states (rows past ``length`` are
+    padding); positions: (1, C) absolute positions ``start + i``;
+    cache: {"k","v"} page pools (L, P+1, ps, hkv, dh) — the last
+    physical page is the masked-write dump page; bt_read: (nblk,) the
+    request's block table; bt_write: (nblk,) its writable row (shared
+    blocks -1, so prefix-attached pages are never rewritten); start:
+    page-aligned chunk origin; length: live tokens in the chunk.
+
+    K/V are cast to the pool dtype BEFORE both the write and the
+    in-chunk attention, so the chunk attends exactly the bytes later
+    chunks and decode steps will read back — which is what makes
+    chunked and whole-prompt prefill agree in f32 pools.
+
+    Dispatches the Pallas fused scatter+attend kernel on feasible
+    shapes (mirroring ``attention_decode_paged``) and falls back to
+    ``ops.paged_prefill_xla``, the bit-compatible dense-gather
+    reference.
+    """
+    c = x.shape[1]
+    q, k, v = _project_qkv(cfg, par, p, x, x, positions, positions, True)
+    kw = k[0].astype(cache["k"].dtype)
+    vw = v[0].astype(cache["v"].dtype)
+    from repro.kernels import ops
+    hkv = k.shape[2]
+    hq = q.shape[2]
+    dh = k.shape[-1]
+    dh_pool = cache["k"].shape[-1]
+    ps = cache["k"].shape[2]
+    choice = (ops.paged_prefill_blocks(c, ps, hkv, hq // hkv, dh,
+                                       pool_dh=dh_pool)
+              if use_kernel else None)
+    if choice is not None:
+        o, kp, vp = ops.paged_prefill(
+            q[0], kw, vw, cache["k"], cache["v"], bt_read, bt_write,
+            start, length, layer=layer, window=window,
+            softcap=cfg.logit_softcap, bh=choice.bh)
+    else:
+        o, kp, vp = ops.paged_prefill_xla(
+            q[0], kw, vw, cache["k"], cache["v"], bt_read, bt_write,
+            start, length, layer=layer, window=window,
+            softcap=cfg.logit_softcap)
+    o = o.astype(x.dtype).reshape(1, c, -1)
+    return dense(o, p["wo"]), {"k": kp, "v": vp}
+
+
 # ---------------------------------------------------------------------------
 # Gated MLP
 # ---------------------------------------------------------------------------
@@ -568,8 +633,14 @@ def apply_moe(cfg: ArchConfig, p: Tree, x: jax.Array,
     buf = buf.at[dest_e, dest_c].set(xt[src])
     buf = buf[: m.n_experts]
 
-    g = _act(cfg.act, expert_dense(buf, p["wg"]))
-    u = expert_dense(buf, p["wu"])
+    if "wgu" in p:
+        # fused expert gate+up: one batched matmul (and one per-expert
+        # salient-channel gather when quantized) for both projections
+        g, u = p["wgu"].split_out(expert_dense(buf, p["wgu"]))
+        g = _act(cfg.act, g)
+    else:
+        g = _act(cfg.act, expert_dense(buf, p["wg"]))
+        u = expert_dense(buf, p["wu"])
     y = expert_dense(g * u, p["wd"])                       # (E,cap,D)
 
     gathered = y[dest_e.clip(0, m.n_experts - 1), dest_c]  # (T*k,D)
@@ -625,6 +696,12 @@ def _apply_moe_shard_map(cfg: ArchConfig, p: Tree, x: jax.Array,
                          par: Parallel) -> jax.Array:
     from jax.sharding import PartitionSpec as PS
     from repro.models.common import _batch_axes, current_mesh
+    if "wgu" in p:
+        # the shard-map path's specs are per-projection: serve it from
+        # the group's unfused member views (same packed bytes, exact)
+        wg, wu = p["wgu"].members()
+        p = {**{k: v for k, v in p.items() if k != "wgu"},
+             "wg": wg, "wu": wu}
     mesh = current_mesh()
     baxes = _batch_axes()
     quantized = hasattr(p["wg"], "__expert_matmul__")

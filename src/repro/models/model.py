@@ -258,6 +258,48 @@ def decode_step_paged(cfg: ArchConfig, par: Parallel, params: Tree,
     return logits[:, 0], tuple(new_caches)
 
 
+def prefill_step_paged(cfg: ArchConfig, par: Parallel, params: Tree,
+                       tokens: jax.Array, caches: Tree,
+                       bt_read: jax.Array, bt_write: jax.Array,
+                       start, length, max_seq: int = 0,
+                       use_kernel: bool = True):
+    """Advance ONE request's paged prefill by one chunk of C tokens.
+
+    tokens (1, C) int32 — the chunk's prompt slice, zero-padded past
+    ``length``; bt_read/bt_write (nblk,) the request's block-table row
+    and its writable (shared-masked) twin; start int32 page-aligned
+    chunk origin; length int32 live tokens (1..C).  The chunk's K/V are
+    scattered into the request's pool pages and its queries attend all
+    previously-written context plus the in-chunk causal prefix — fused
+    per layer, so no dense (B, bucket, hkv, dh) prefill cache ever
+    exists.  Returns ``(last_logits, new_caches)`` where last_logits
+    (1, V) are the logits at chunk row ``length - 1`` (only meaningful
+    on the prompt's final chunk, where the engine samples the first
+    token from them).
+
+    Attention-stage architectures only (recurrent stages carry
+    sequential state across chunks — they keep the whole-prompt path).
+    """
+    if cfg.enc_dec:
+        raise NotImplementedError("chunked prefill does not support enc-dec")
+    c = tokens.shape[1]
+    positions = (jnp.asarray(start, jnp.int32)
+                 + jnp.arange(c, dtype=jnp.int32))[None]
+    x = embed_tokens(cfg, params, tokens)
+    x = hint_act(x, par)
+    new_caches = []
+    for stage, sp, cch in zip(cfg.stages, params["stages"], caches):
+        x, nc = T.stage_prefill_step_paged(cfg, par, stage, sp, x,
+                                           positions, cch, bt_read,
+                                           bt_write, start, length,
+                                           max_seq, use_kernel)
+        new_caches.append(nc)
+    xl = jax.lax.dynamic_slice_in_dim(
+        x, jnp.asarray(length, jnp.int32) - 1, 1, axis=1)
+    logits = logits_fn(cfg, params, xl)
+    return logits[:, 0], tuple(new_caches)
+
+
 def splice_prefill(cfg: ArchConfig, caches: Tree, cache1: Tree, slot):
     """Contiguous splice: copy a batch-1 prefill cache into decode slot."""
     return jax.tree.map(lambda c, c1: c.at[:, slot].set(c1[:, 0]),

@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import zlib
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 
@@ -83,13 +84,21 @@ def _init_leaf(p: P, key) -> jax.Array:
 
 def materialize(tree, key) -> Any:
     """P tree -> concrete arrays.  Deterministic per-leaf key derivation
-    (path-hash folded into the base key) so init is stable under tree edits."""
+    (path-hash folded into the base key) so init is stable under tree
+    edits.
+
+    The path hash must be ``zlib.crc32``, NOT the builtin ``hash()``:
+    Python randomizes string hashing per process (PYTHONHASHSEED), so
+    ``hash(path_str)`` silently gave every process DIFFERENT initial
+    weights for the same seed — the root cause of the long-standing
+    "~50% xlstm train-smoke flake" (some per-process init draws push the
+    chaotic sLSTM trajectory to inf; nothing to do with threading)."""
     leaves = jax.tree_util.tree_leaves_with_path(tree, is_leaf=is_leaf)
-    out = {}
     arrays = []
     for path, p in leaves:
         path_str = jax.tree_util.keystr(path)
-        sub = jax.random.fold_in(key, hash(path_str) % (2**31 - 1))
+        sub = jax.random.fold_in(
+            key, zlib.crc32(path_str.encode()) % (2**31 - 1))
         arrays.append(_init_leaf(p, sub))
     treedef = jax.tree.structure(tree, is_leaf=is_leaf)
     return jax.tree.unflatten(treedef, arrays)

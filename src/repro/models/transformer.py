@@ -70,15 +70,18 @@ def _fusable(d, names) -> bool:
 def fuse_block_params(p: Tree) -> Tree:
     """Fuse one block's same-input projections along N for decode.
 
-    ``wq``/``wk``/``wv`` become one ``wqkv`` :class:`QLinearGroup` and a
-    dense MLP's ``wg``/``wu`` become ``wgu`` — each transformer block
-    then issues 2 projection matmuls instead of 5.  Concatenating fp
-    arrays is mathematically exact; already-quantized (QLinear) leaves
-    are left unfused because post-hoc fusion cannot reconcile their
-    per-projection permutations — quantize with
-    ``quantize_params_data_free(..., fuse=True)`` to get fused packed
-    layouts.  MoE expert weights (router present) and cross-attention
-    keep the per-projection path.
+    ``wq``/``wk``/``wv`` become one ``wqkv`` :class:`QLinearGroup` and an
+    MLP's ``wg``/``wu`` become ``wgu`` — each transformer block then
+    issues 2 projection matmuls instead of 5.  MoE expert weights fuse
+    the same way along their last (N) axis: the stacked ``(E, K, F)``
+    gate/up pair becomes one ``(E, K, 2F)`` group served by a single
+    ``expert_dense`` batched matmul (and, quantized, one per-expert
+    activation gather).  Concatenating fp arrays is mathematically
+    exact; already-quantized (QLinear) leaves are left unfused because
+    post-hoc fusion cannot reconcile their per-projection permutations —
+    quantize with ``quantize_params_data_free(..., fuse=True)`` to get
+    fused packed layouts.  Cross-attention keeps the per-projection
+    path.
     """
     from repro.core.qlinear import QLinearGroup
     p = dict(p)
@@ -90,7 +93,7 @@ def fuse_block_params(p: Tree) -> Tree:
                                     tuple(int(w.shape[-1]) for w in ws))
         p["attn"] = attn
     mlp = p.get("mlp")
-    if mlp is not None and "router" not in mlp and _fusable(mlp, ("wg", "wu")):
+    if mlp is not None and _fusable(mlp, ("wg", "wu")):
         mlp = dict(mlp)
         ws = [mlp.pop(k) for k in ("wg", "wu")]
         mlp["wgu"] = QLinearGroup(jnp.concatenate(ws, axis=-1),
@@ -424,6 +427,53 @@ def stage_step_paged(cfg: ArchConfig, par: Parallel, stage: Stage,
 
     return jax.lax.cond(jnp.any(block_tables >= 0), walk,
                         lambda args: args, (x, caches))
+
+
+def block_prefill_step_paged(cfg: ArchConfig, par: Parallel, kind: str,
+                             p: Tree, x: jax.Array, positions: jax.Array,
+                             cache: Tree, bt_read: jax.Array,
+                             bt_write: jax.Array, start, length,
+                             max_seq: int, layer: int,
+                             use_kernel: bool = True):
+    """One block of one CHUNK of paged prefill (attention kinds only —
+    recurrent blocks carry sequential state across chunks, which the
+    chunked path does not thread; the engine keeps whole-prompt prefill
+    for hybrid stages)."""
+    if kind not in ATTN_KINDS:
+        raise NotImplementedError(
+            f"chunked paged prefill supports attention blocks only, "
+            f"got {kind!r} — serve hybrid/recurrent stages with the "
+            f"whole-prompt prefill path")
+    w = _kind_window(cfg, kind, max_seq)
+    h, new_cache = L.attention_prefill_paged(
+        cfg, par, p["attn"], L.apply_norm(cfg, p["ln1"], x), positions,
+        cache, bt_read, bt_write, start, length, layer=layer, window=w,
+        use_kernel=use_kernel)
+    x = x + h
+    z = L.apply_norm(cfg, p["ln2"], x)
+    h = L.apply_moe(cfg, p["mlp"], z, par) if kind == "moe" else \
+        L.apply_mlp(cfg, p["mlp"], z)
+    return hint_act(x + h, par), new_cache
+
+
+def stage_prefill_step_paged(cfg: ArchConfig, par: Parallel, stage: Stage,
+                             sparams: Tree, x: jax.Array,
+                             positions: jax.Array, caches: Tree,
+                             bt_read: jax.Array, bt_write: jax.Array,
+                             start, length, max_seq: int = 0,
+                             use_kernel: bool = True):
+    """Chunk-prefill walk over a stage: unrolled over layers exactly
+    like :func:`stage_step_paged`, so each layer's fused scatter+attend
+    updates the stacked pool in place instead of round-tripping it
+    through a scan carry."""
+    cur = list(caches)
+    for layer in range(stage.repeats):
+        lp = jax.tree.map(lambda a: a[layer], sparams)
+        for i, kind in enumerate(stage.pattern):
+            x, cur[i] = block_prefill_step_paged(
+                cfg, par, kind, lp[i], x, positions, cur[i], bt_read,
+                bt_write, start, length, max_seq, layer, use_kernel)
+    return x, tuple(cur)
 
 
 def stage_splice_paged(cfg: ArchConfig, stage: Stage, pool_stage: Tree,

@@ -6,6 +6,23 @@ decode step takes a (B,) position vector, so ragged progress is native).
 New requests prefill (jitted, padded to `prefill_buckets`) and splice
 their cache in; finished slots free immediately.
 
+With ``chunked_prefill=True`` (paged, attention-only archs) the
+whole-prompt pass disappears entirely: admission reserves the prompt's
+pages and sets a *chunk frontier*, and each tick advances at most
+``prefill_chunk`` tokens of prefill — one fused scatter+attend kernel
+call (`repro.kernels.paged_prefill`) that writes the chunk's K/V
+straight into the slot's pool pages and attends context + in-chunk
+causal prefix — before the batched decode step runs over the
+*decoding* slots (mid-prefill slots are masked out of the decode:
+table rows -1, context lens 0).  A long prompt therefore costs every
+concurrent decode at most one chunk of latency per tick instead of a
+whole-prompt stall; preemption can land between chunks (the victim
+re-prefills its context seq, greedy-identical); and prefix-cache hits
+skip fully-shared chunks' kernel calls outright — including
+mid-prefill catch-up adoption when a same-prefix cohort peer registers
+pages first, and post-cohort hits through the retention LRU
+(``prefix_retain_pages``).
+
 The engine is a **reentrant tick loop**, not a batch-and-drain box:
 :meth:`Engine.tick` advances every active slot by one decode step and
 publishes typed events (:mod:`repro.runtime.events`) the moment they
@@ -146,12 +163,14 @@ class _PagedBackend:
 
     def __init__(self, eng: "Engine", page_size: int, pool_pages: int,
                  use_kernel: bool = True, prefix_sharing: bool = False,
-                 cache_dtype=None):
+                 cache_dtype=None, prefix_retain_pages: int = 0):
         self.eng = eng
         max_blocks = pages_for_tokens(eng.max_seq, page_size)
         self.pool = PagePool(pool_pages, page_size)
         self.tables = BlockTables(self.pool, eng.n_slots, max_blocks)
-        self.prefix = PrefixCache(self.pool) if prefix_sharing else None
+        self.prefix = (PrefixCache(self.pool,
+                                   retain_pages=prefix_retain_pages)
+                       if prefix_sharing else None)
         # admission-hint memo: rid -> matched pages, valid for one
         # (registry writes, pool frees) version — a blocked head is
         # hashed once, not once per tick, and splice reuses the pages
@@ -167,28 +186,52 @@ class _PagedBackend:
         self._splice = jax.jit(functools.partial(
             M.splice_prefill_paged, eng.cfg))
         self._copy = jax.jit(functools.partial(M.copy_pages, eng.cfg))
+        # chunked-prefill step (one request, one chunk): start/length
+        # ride as traced scalars so every chunk of every prompt hits the
+        # ONE compiled (1, prefill_chunk) shape — no bucket ladder
+        self._chunk_step = jax.jit(functools.partial(
+            M.prefill_step_paged, eng.cfg, eng.par, max_seq=eng.max_seq,
+            use_kernel=use_kernel))
+        self.prefill_chunk_calls = 0
+        self.prefill_kv_read_bytes = 0
 
     @property
     def page_size(self) -> int:
         return self.pool.page_size
 
     def free_pages(self) -> Optional[int]:
-        return self.pool.free_pages
+        """Admission headroom: the free list plus whatever the prefix
+        retention LRU could evict on demand (the pool's pressure hook
+        reclaims those inside ``alloc`` when the free list falls
+        short)."""
+        free = self.pool.free_pages
+        if self.prefix is not None and self.prefix.retain_pages > 0:
+            free += self.prefix.evictable()
+        return free
 
     def page_util(self) -> Optional[float]:
         return self.pool.pages_in_use / self.pool.num_pages
 
     def shared_page_hint(self, rid: int, seq: np.ndarray) -> int:
-        """Pages a prefix-cache attach would cover for ``seq`` right now
-        (admission accounting: the scheduler subtracts them from the
-        head's page need).  Registry state cannot change between this
-        hint and the attach in ``splice`` — both happen inside the same
-        host-side admission pass — so the matched pages are memoized by
-        rid and the splice reuses them instead of re-hashing the
-        prompt.  The memo survives across ticks until any registry
-        write or page free (either can only change match results when
-        it happens), so a queued head blocked on free pages does not
-        pay O(prompt) hashing per tick."""
+        """Pages a prefix-cache attach would effectively save for
+        ``seq`` right now (admission accounting: the scheduler subtracts
+        them from the head's page need).  Registry state cannot change
+        between this hint and the attach in ``splice`` — both happen
+        inside the same host-side admission pass — so the matched pages
+        are memoized by rid and the splice reuses them instead of
+        re-hashing the prompt.  The memo survives across ticks until
+        any registry write or page free (either can only change match
+        results when it happens), so a queued head blocked on free
+        pages does not pay O(prompt) hashing per tick.
+
+        With retention on, matched pages whose ONLY holder is the
+        retention LRU must NOT be discounted: :meth:`free_pages`
+        already counts them as evictable headroom, and the attach pins
+        them (refcount 2) so they stop being evictable the moment the
+        request starts — discounting them too would double-count and
+        admit a head whose remaining pages cannot actually be
+        allocated.  Refcounts are re-read on every call (they can move
+        without a free event)."""
         if self.prefix is None:
             return 0
         ver = (self.prefix.writes, self.pool.free_events)
@@ -197,7 +240,11 @@ class _PagedBackend:
             self._hint_ver = ver
         if rid not in self._hint_cache:
             self._hint_cache[rid] = self.prefix.match(seq)
-        return len(self._hint_cache[rid])
+        pages = self._hint_cache[rid]
+        if self.prefix.retain_pages > 0:
+            return len(pages) - sum(1 for p in pages
+                                    if self.pool.refcount(p) == 1)
+        return len(pages)
 
     def _apply_cow(self) -> None:
         pairs = self.tables.drain_copies()
@@ -233,12 +280,43 @@ class _PagedBackend:
     def release(self, slot: int) -> int:
         return self.tables.release(slot)
 
-    def decode(self, params, toks, pos):
+    def decode(self, params, toks, pos, active=None):
+        """One batched decode step.  ``active`` (np bool (n_slots,) or
+        None) masks slots that must not decode this tick — mid-prefill
+        slots under chunked prefill: their block-table rows go to -1
+        (the device write is dropped) and their context lens to 0 (the
+        kernel zero-fills), all in host numpy so the jitted signature
+        never changes."""
         self._apply_cow()
-        bt = jnp.asarray(self.tables.as_array())
-        lens = jnp.asarray(self.tables.context_lens())
+        bt = self.tables.as_array()
+        lens = self.tables.context_lens()
+        if active is not None:
+            bt = np.where(active[:, None], bt, -1)
+            lens = np.where(active, lens, 0)
         logits, self.caches = self._decode(params, toks, pos, self.caches,
-                                           bt, lens)
+                                           jnp.asarray(bt),
+                                           jnp.asarray(lens))
+        return logits
+
+    def prefill_chunk(self, params, toks, slot: int, start: int,
+                      length: int):
+        """Advance ``slot``'s prefill by one chunk: fused scatter+attend
+        straight into the slot's pool pages (kernel or XLA fallback —
+        see models.layers.attention_prefill_paged).  Returns the chunk's
+        last-live-row logits (1, V)."""
+        self._apply_cow()
+        bt_read = jnp.asarray(self.tables.as_array()[slot])
+        bt_write = jnp.asarray(self.tables.writable_row(slot))
+        logits, self.caches = self._chunk_step(
+            params, toks, self.caches, bt_read, bt_write,
+            jnp.int32(start), jnp.int32(length))
+        self.prefill_chunk_calls += 1
+        from repro.kernels import autotune
+        eng = self.eng
+        hkv = eng.par.kv_heads_run(eng.cfg.n_kv_heads, eng.cfg.n_heads)
+        self.prefill_kv_read_bytes += eng.cfg.n_layers * \
+            autotune.paged_prefill_read_bytes(
+                start, length, self.page_size, hkv, eng.cfg.head_dim_)
         return logits
 
 
@@ -253,6 +331,10 @@ class Engine:
                  pool_pages: Optional[int] = None,
                  paged_kernel: bool = True,
                  prefix_sharing: bool = False,
+                 prefix_retain_pages: int = 0,
+                 chunked_prefill: bool = False,
+                 prefill_chunk: int = 64,
+                 prefill_chunks_per_tick: int = 1,
                  cache_dtype=None,
                  scheduler: Optional[Scheduler] = None,
                  metrics: Optional[EngineMetrics] = None,
@@ -269,9 +351,33 @@ class Engine:
         self.n_slots, self.max_seq = n_slots, max_seq
         self.buckets = tuple(sorted(b for b in prefill_buckets
                                     if b <= max_seq)) or (max_seq,)
+        if chunked_prefill:
+            if not paged:
+                raise ValueError("chunked_prefill requires paged=True "
+                                 "(chunks scatter into pool pages)")
+            kinds = {k for s in cfg.stages for k in s.pattern}
+            if not kinds <= set(T.ATTN_KINDS):
+                raise ValueError(
+                    f"chunked_prefill supports attention-only stages, "
+                    f"got kinds {sorted(kinds)} — recurrent cells carry "
+                    f"sequential state across chunks; serve this arch "
+                    f"with the whole-prompt path")
+            if prefill_chunk <= 0 or prefill_chunk % page_size:
+                raise ValueError(
+                    f"prefill_chunk={prefill_chunk} must be a positive "
+                    f"multiple of page_size={page_size} (chunks must "
+                    f"tile into pages)")
+            if prefill_chunks_per_tick <= 0:
+                raise ValueError("prefill_chunks_per_tick must be >= 1")
+        self.chunked_prefill = chunked_prefill
+        self.prefill_chunk = prefill_chunk
+        self.prefill_chunks_per_tick = prefill_chunks_per_tick
         # a prefill of max_seq tokens would put the first decode write at
-        # position max_seq (past every cache layout) — cap prompts one short
-        self.max_prompt = min(self.buckets[-1], max_seq - 1)
+        # position max_seq (past every cache layout) — cap prompts one
+        # short.  Chunked prefill has no bucket ladder (every chunk is
+        # the same compiled shape), so only the decode ceiling caps it.
+        self.max_prompt = (max_seq - 1 if chunked_prefill
+                           else min(self.buckets[-1], max_seq - 1))
         self.key = jax.random.PRNGKey(seed)
         self.scheduler = scheduler or Scheduler()
         self.metrics = metrics or EngineMetrics()
@@ -290,15 +396,25 @@ class Engine:
             # paged_kernel: paged decode attention through the Pallas
             # flash-decode kernel on feasible shapes (default); False
             # pins the XLA-gather reference path (oracle / debugging)
-            self.backend = _PagedBackend(self, page_size, pool_pages,
-                                         use_kernel=paged_kernel,
-                                         prefix_sharing=prefix_sharing,
-                                         cache_dtype=cache_dtype)
+            self.backend = _PagedBackend(
+                self, page_size, pool_pages,
+                use_kernel=paged_kernel,
+                prefix_sharing=prefix_sharing,
+                cache_dtype=cache_dtype,
+                prefix_retain_pages=prefix_retain_pages)
         else:
             if prefix_sharing:
                 raise ValueError("prefix_sharing requires paged=True "
                                  "(sharing lives in the page allocator)")
             self.backend = _ContiguousBackend(self)
+        if prefix_retain_pages and not prefix_sharing:
+            raise ValueError("prefix_retain_pages requires "
+                             "prefix_sharing=True (retention extends the "
+                             "prefix cache's hit window)")
+        # chunked prefill: slot -> in-progress prefill frontier state
+        # ({"seq", "frontier", "resumed"}); a slot present here holds a
+        # request but must not decode yet
+        self._prefill_state: Dict[int, Dict[str, Any]] = {}
 
         self._prefill = jax.jit(functools.partial(
             M.prefill, cfg, par, max_seq=max_seq))
@@ -417,6 +533,136 @@ class Engine:
         return r.prompt
 
     # ------------------------------------------------------------------
+    def _start_chunked(self, slot: int, r: Request) -> None:
+        """Occupy ``slot`` for chunked prefill: attach any shared prefix
+        pages, reserve the prompt's pages, and set the chunk frontier —
+        the actual compute happens chunk-by-chunk in
+        :meth:`_advance_prefill` across subsequent ticks.  Chunks fully
+        covered by prefix-cache pages are skipped outright (zero
+        prefill-kernel calls for them): the frontier starts at the
+        shared-page boundary, capped one page short of the prompt end so
+        the final chunk always runs (its last-row logits seed the first
+        sampled token)."""
+        be = self.backend
+        seq = self._context_seq(r)
+        assert len(seq) <= self.max_seq - 1, (len(seq), self.max_seq)
+        s = len(seq)
+        ps = be.page_size
+        shared: list = []
+        if be.prefix is not None:
+            hinted = be._hint_cache.pop(r.rid, None)
+            shared = hinted if hinted is not None else be.prefix.match(seq)
+            be.prefix.count_attach(len(shared))
+            if shared:
+                be.tables.fork(slot, shared)
+        ok = be.tables.ensure_blocks(slot, pages_for_tokens(s, ps))
+        assert ok, "admission must reserve prompt pages first"
+        skip = min(len(shared) * ps, ((s - 1) // ps) * ps)
+        if skip:
+            self.metrics.on_prefill_skip(skip)
+        self.slot_req[slot] = r
+        self.temps[slot] = r.temperature
+        st: Dict[str, Any] = {"seq": seq, "frontier": skip,
+                              "resumed": bool(r.out_tokens)}
+        if be.prefix is not None:
+            # the admission match is current as of this version — the
+            # catch-up pass in _advance_prefill only re-matches when a
+            # peer has registered (or the pool freed) since
+            st["match_ver"] = (be.prefix.writes, be.pool.free_events)
+        self._prefill_state[slot] = st
+
+    def _advance_prefill(self, slot: int) -> int:
+        """Run ONE chunk of ``slot``'s in-progress prefill; on reaching
+        the prompt end, graduate the slot to decoding (sample the first
+        token from the final chunk's logits, or re-feed the pending
+        token on a preemption resume).  Returns the live tokens
+        processed."""
+        st = self._prefill_state[slot]
+        r = self.slot_req[slot]
+        be = self.backend
+        seq = st["seq"]
+        s = len(seq)
+        ps = be.page_size
+        # ---- mid-prefill prefix catch-up: a cohort peer may have
+        # registered pages for chunks we have not computed yet (it was
+        # admitted with us, ahead of us in chunk order) — adopt its
+        # pages and fast-forward the frontier, skipping those chunks'
+        # kernel calls outright.  Memoized on the registry/pool version
+        # so an unchanged registry costs no re-hash.
+        if be.prefix is not None:
+            ver = (be.prefix.writes, be.pool.free_events)
+            if st.get("match_ver") != ver:
+                st["match_ver"] = ver
+                matched = be.prefix.match(seq)
+                skip_to = min(len(matched) * ps, ((s - 1) // ps) * ps)
+                if skip_to > st["frontier"]:
+                    for blk in range(st["frontier"] // ps, skip_to // ps):
+                        be.tables.adopt_shared(slot, blk, matched[blk])
+                    be.prefix.count_attach(
+                        skip_to // ps - st["frontier"] // ps)
+                    self.metrics.on_prefill_skip(skip_to - st["frontier"])
+                    st["frontier"] = skip_to
+        start = st["frontier"]
+        c = self.prefill_chunk
+        length = min(c, s - start)
+        toks = np.zeros((1, c), np.int32)
+        toks[0, :length] = seq[start:start + length]
+        logits = self._timed(
+            "prefill_chunk", c,
+            lambda: self.backend.prefill_chunk(self.params,
+                                               jnp.asarray(toks), slot,
+                                               start, length))
+        st["frontier"] = start + length
+        self.metrics.on_prefill_chunk(length)
+        # register the freshly-completed full pages as they appear (so
+        # cohort peers can catch up mid-prefill, not only after we
+        # finish); the chain state makes each call O(chunk)
+        if be.prefix is not None:
+            st["reg_state"], _ = be.prefix.register_prefix(
+                seq[:st["frontier"]], be.tables.owned(slot),
+                st.get("reg_state"))
+            st["match_ver"] = (be.prefix.writes, be.pool.free_events)
+        if st["frontier"] < s:
+            return length
+        # ---- prompt complete: graduate to decoding -------------------
+        del self._prefill_state[slot]
+        # the first decode page: admission accounted prompt+1, but other
+        # slots may have grown into that page since — preempt on
+        # shortfall (possibly evicting this very request, which then
+        # resumes from the queue)
+        while self.slot_req[slot] is r and \
+                not be.ensure_capacity(slot, s):
+            if not self._preempt_for(slot):
+                raise RuntimeError(
+                    "page pool exhausted with no preemption victim; "
+                    "grow --pool-pages")
+        if self.slot_req[slot] is not r:
+            return length               # evicted ourselves: re-queued
+        if st["resumed"]:
+            tok = r.out_tokens[-1]
+        else:
+            tok = int(self._sample(logits.astype(jnp.float32),
+                                   self._next_key(),
+                                   jnp.asarray([r.temperature],
+                                               jnp.float32))[0])
+            r.out_tokens.append(tok)
+            self.metrics.on_token(r.rid)
+            self._emit(TokenEvent(r.rid, tok, len(r.out_tokens) - 1,
+                                  self._tick_no))
+            if len(r.out_tokens) >= r.max_new:   # max_new=1: done here
+                r.done = True
+                self.metrics.on_finish(r.rid)
+                self._requests.pop(r.rid, None)
+                freed = self.backend.release(slot)
+                self.slot_req[slot] = None
+                self._emit(FinishEvent(r.rid, "max_new",
+                                       len(r.out_tokens), freed,
+                                       self._tick_no))
+                return length
+        self.pos[slot] = s
+        self.cur_tok[slot] = tok
+        return length
+
     def _start(self, slot: int, r: Request) -> None:
         """(Re-)prefill `r` and occupy `slot`.
 
@@ -426,6 +672,8 @@ class Engine:
         is re-fed as the next decode input) so decoding continues where
         it stopped.
         """
+        if self.chunked_prefill:
+            return self._start_chunked(slot, r)
         resumed = bool(r.out_tokens)
         seq = self._context_seq(r)
         # a resume seq is bounded by the decode ceiling (generation stops
@@ -519,6 +767,10 @@ class Engine:
         self.metrics.on_preempt(r.rid)
         freed = self.backend.release(victim)
         self.slot_req[victim] = None
+        # a mid-prefill victim abandons its chunk frontier: the resume
+        # re-prefills the same context seq from the top (or from its
+        # prefix-cache hit), reproducing identical greedy tokens
+        self._prefill_state.pop(victim, None)
         self._emit(PreemptEvent(r.rid, victim, freed, self._tick_no))
         # front of its class queue: the victim becomes that class's
         # longest-waiting request and is re-admitted first (no
@@ -532,6 +784,7 @@ class Engine:
         and retry; preempting may evict the very slot we were growing."""
         for slot in range(self.n_slots):
             while self.slot_req[slot] is not None and \
+                    slot not in self._prefill_state and \
                     not self.backend.ensure_capacity(slot, int(self.pos[slot])):
                 if not self._preempt_for(slot):
                     raise RuntimeError(
@@ -578,6 +831,7 @@ class Engine:
                 if rr is not None and rr.rid == rid:
                     freed = self.backend.release(slot)
                     self.slot_req[slot] = None
+                    self._prefill_state.pop(slot, None)
                     break
         r.done = True
         r.cancelled = True
@@ -610,6 +864,8 @@ class Engine:
                 "pages_attached": st.pages_attached,
                 "tokens_shared": st.tokens_shared,
                 "entries": st.entries,
+                "retained": st.retained,
+                "evictions": st.evictions,
                 "cow_copies": be.tables.cow_copies,
                 "forked_pages": be.tables.forked_pages}
 
@@ -642,18 +898,41 @@ class Engine:
             self.scheduler.queue_depth,
             sum(r is not None for r in self.slot_req),
             self.backend.page_util())
+        # ---- chunked-prefill phase: a bounded slice of prefill work
+        # interleaves with (instead of stalling) the decode step below.
+        # The scheduler picks which in-progress prefill advances
+        # (class-weighted, FCFS within a class); the budget caps the
+        # prefill compute any single tick can absorb, which is what
+        # bounds the inter-token gap of concurrent decodes.
+        if self._prefill_state:
+            for _ in range(self.prefill_chunks_per_tick):
+                if not self._prefill_state:
+                    break
+                sl = self.scheduler.next_prefill_slot(
+                    {s: self.slot_req[s] for s in self._prefill_state})
+                self._advance_prefill(sl)
+        decoding = [s for s, r in enumerate(self.slot_req)
+                    if r is not None and s not in self._prefill_state]
+        if not decoding:
+            return True                 # pure-prefill tick
+        active = None
+        if self._prefill_state:
+            active = np.zeros((self.n_slots,), bool)
+            active[decoding] = True
         toks = jnp.asarray(self.cur_tok)
         pos = jnp.asarray(self.pos)
         logits = self._timed(
             "decode", self.backend.name,
-            lambda: self.backend.decode(self.params, toks, pos))
+            lambda: (self.backend.decode(self.params, toks, pos, active)
+                     if active is not None else
+                     self.backend.decode(self.params, toks, pos)))
         # one vectorized device sample across all slots (no per-slot
         # logits round-trips through numpy)
         next_toks = np.asarray(self._sample(logits.astype(jnp.float32),
                                             self._next_key(),
                                             jnp.asarray(self.temps)))
         for slot, r in enumerate(self.slot_req):
-            if r is None:
+            if r is None or slot in self._prefill_state:
                 continue
             tok = int(next_toks[slot])
             r.out_tokens.append(tok)

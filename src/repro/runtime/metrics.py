@@ -60,6 +60,11 @@ class EngineMetrics:
         self.cancellations = 0
         self.ticks = 0
         self.prefills = 0
+        # chunked prefill: chunk calls / live tokens processed / tokens
+        # skipped outright on prefix-cache hits (zero kernel calls)
+        self.prefill_chunks = 0
+        self.prefill_chunk_tokens = 0
+        self.prefill_tokens_skipped = 0
         self._start_t: Optional[float] = None
         self._last_t: Optional[float] = None
         # per-tick gauge samples
@@ -120,6 +125,17 @@ class EngineMetrics:
         self.cancellations += 1
         self._cancelled.add(rid)    # partially served: tokens/TBT count,
                                     # completion/latency do not
+
+    def on_prefill_chunk(self, n_tokens: int) -> None:
+        """One chunked-prefill step processed ``n_tokens`` live prompt
+        tokens (interleaved with decode in the same tick)."""
+        self.prefill_chunks += 1
+        self.prefill_chunk_tokens += n_tokens
+
+    def on_prefill_skip(self, n_tokens: int) -> None:
+        """``n_tokens`` of prompt were covered by prefix-cache pages and
+        skipped the prefill compute entirely."""
+        self.prefill_tokens_skipped += n_tokens
 
     def on_phase_time(self, phase: str, seconds: float) -> None:
         """Record one jitted step's wall time for ``phase``.  Decode runs
@@ -189,6 +205,9 @@ class EngineMetrics:
             "latency_p95_s": _percentile(lat, 0.95),
             "ticks": self.ticks,
             "prefills": self.prefills,
+            "prefill_chunks": self.prefill_chunks,
+            "prefill_chunk_tokens": self.prefill_chunk_tokens,
+            "prefill_tokens_skipped": self.prefill_tokens_skipped,
             "preemptions": self.preemptions,
             "expirations": self.expirations,
             "cancellations": self.cancellations,

@@ -58,8 +58,9 @@ the device-side gather/scatter lives in ``repro.models.layers``
 from __future__ import annotations
 
 import hashlib
+from collections import OrderedDict
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -100,6 +101,11 @@ class PagePool:
             raise ValueError(f"bad pool geometry {num_pages}x{page_size}")
         self.num_pages = int(num_pages)
         self.page_size = int(page_size)
+        # allocation-pressure callback: invoked with the page shortfall
+        # when the free list can't cover an alloc, BEFORE the alloc
+        # fails — the prefix retention cache hooks in here to evict its
+        # least-recently-used retained pages on demand
+        self.pressure_hook: Optional[Callable[[int], int]] = None
         # LIFO free list: recently freed pages are reused first (their
         # pool lines are more likely to still be resident in HBM caches).
         self._free: List[int] = list(range(num_pages - 1, -1, -1))
@@ -132,7 +138,10 @@ class PagePool:
 
     def alloc(self, n: int = 1) -> Optional[List[int]]:
         """Allocate ``n`` pages at refcount 1, or None (and no change)
-        if unavailable."""
+        if unavailable.  On a free-list shortfall the pressure hook (if
+        set) gets one chance to reclaim retained pages first."""
+        if n > len(self._free) and self.pressure_hook is not None:
+            self.pressure_hook(n - len(self._free))
         if n > len(self._free):
             self._failures += 1
             return None
@@ -255,6 +264,22 @@ class BlockTables:
         self._shared[slot] = set(range(len(pages)))
         self.forked_pages += len(pages)
 
+    def adopt_shared(self, slot: int, blk: int, page: int) -> None:
+        """Swap an owned, NOT-YET-WRITTEN block for a shared page
+        (mid-prefill prefix catch-up: a cohort peer registered this
+        chunk's page after we were admitted).  The old page goes back to
+        the pool; the adopted page is increfed and marked shared exactly
+        like a :meth:`fork` attach, so splices/chunk writes skip it."""
+        if blk in self._shared[slot]:
+            raise ValueError(f"block {blk} of slot {slot} already shared")
+        old = self._owned[slot][blk]
+        self.pool.incref([page])
+        self.pool.free([old])
+        self._owned[slot][blk] = page
+        self._tables[slot, blk] = page
+        self._shared[slot].add(blk)
+        self.forked_pages += 1
+
     def ensure_blocks(self, slot: int, n_blocks: int) -> bool:
         """Grow ``slot``'s table to ``n_blocks`` blocks.  Returns False —
         with no partial allocation — when the pool can't supply them."""
@@ -347,6 +372,8 @@ class PrefixStats:
     pages_attached: int         # total pages attached instead of allocated
     tokens_shared: int
     entries: int
+    retained: int = 0           # pages currently held by the retention LRU
+    evictions: int = 0          # retained pages released under pressure
 
 
 class PrefixCache:
@@ -366,9 +393,26 @@ class PrefixCache:
     re-splices are masked off shared pages by
     :meth:`BlockTables.writable_row`), which is what makes attaching
     them read-only safe.
+
+    **Retention** (``retain_pages > 0``): without it, registered pages
+    die with their last holder — a straggler admitted after its cohort
+    finished re-prefills from scratch.  The retention LRU takes one
+    extra reference on every registered page, so the page (and its
+    registry entry) outlives the cohort; under allocation pressure the
+    pool's pressure hook calls :meth:`evict_for` and retained pages
+    with no other holder are released (generation bump lazily
+    invalidates their entries).
+
+    Eviction is **group-aware and deepest-first**: pages are grouped by
+    their prefix *root* (the chain key of chunk 0), groups form the LRU
+    (matches and re-registrations refresh a group), and within the
+    least-recently-used group the DEEPEST chunks evict first.  Evicting
+    the chain head would make the whole prefix unmatchable while its
+    deeper pages stayed pinned; tail-first eviction instead degrades a
+    cold prefix to a shorter — still useful — one.
     """
 
-    def __init__(self, pool: PagePool):
+    def __init__(self, pool: PagePool, retain_pages: int = 0):
         self.pool = pool
         self.page_size = pool.page_size
         self._entries: Dict[bytes, _PrefixEntry] = {}
@@ -379,6 +423,14 @@ class PrefixCache:
         self._hits = 0
         self._pages_attached = 0
         self._tokens_shared = 0
+        self.retain_pages = int(retain_pages)
+        # page -> (generation, prefix root, chunk depth); roots form the
+        # LRU (OrderedDict order = least... most recently used)
+        self._retained: Dict[int, Tuple[int, bytes, int]] = {}
+        self._groups: "OrderedDict[bytes, None]" = OrderedDict()
+        self._evictions = 0
+        if self.retain_pages > 0:
+            pool.pressure_hook = self.evict_for
 
     # ------------------------------------------------------------------
     @staticmethod
@@ -407,9 +459,12 @@ class PrefixCache:
         :meth:`count_attach` (so the admission hint and the splice can
         share ONE match walk without double-counting stats)."""
         key = b""
+        root: Optional[bytes] = None
         pages: List[int] = []
         for _, chunk in self._chunks(tokens):
             key = self._chain(key, chunk)
+            if root is None:
+                root = key
             e = self._entries.get(key)
             if e is None:
                 break
@@ -421,7 +476,62 @@ class PrefixCache:
                 break                       # hash collision: live entry,
                                             # different chunk — keep it
             pages.append(e.page)
+        if pages and root in self._groups:  # hit refreshes the group LRU
+            self._groups.move_to_end(root)
         return pages
+
+    # -- retention LRU (group-aware, deepest-first eviction) -------------
+    def _retain(self, page: int, root: bytes, depth: int) -> None:
+        if self.retain_pages <= 0:
+            return
+        if page not in self._retained:
+            self.pool.incref([page])
+            self._retained[page] = (self.pool.generation(page), root,
+                                    depth)
+        self._groups[root] = None
+        self._groups.move_to_end(root)
+        # cap: shed pages nobody else holds (in-use pages may ride over
+        # the cap — retaining them costs no free-list capacity, and they
+        # fall out on the first pressure call after their cohort)
+        excess = len(self._retained) - self.retain_pages
+        if excess > 0:
+            self.evict_for(excess)
+
+    def evictable(self) -> int:
+        """Retained pages an eviction pass could return to the free list
+        right now (no holder besides the retention reference) — what the
+        engine adds to its admission free-page headroom."""
+        return sum(1 for p in self._retained
+                   if self.pool.refcount(p) == 1)
+
+    def evict_for(self, n: int) -> int:
+        """Release up to ``n`` retained pages that have no other holder:
+        least-recently-used prefix GROUP first, deepest chunks within a
+        group first — a cold prefix shrinks from its tail (shorter
+        matches keep working) instead of losing its chain head (which
+        would orphan every deeper page while they stayed pinned).
+        Returns how many pages actually reached the free list.  Pages
+        still held by live requests keep their retention (dropping it
+        would free nothing)."""
+        freed = 0
+        for root in list(self._groups):
+            if freed >= n:
+                break
+            members = sorted(
+                (p for p, (_, r, _d) in self._retained.items()
+                 if r == root),
+                key=lambda p: -self._retained[p][2])      # deepest first
+            for page in members:
+                if freed >= n:
+                    break
+                if self.pool.refcount(page) == 1:
+                    del self._retained[page]
+                    freed += self.pool.free([page])
+                    self._evictions += 1
+            if not any(r == root
+                       for (_, r, _d) in self._retained.values()):
+                self._groups.pop(root, None)
+        return freed
 
     def count_attach(self, n_pages: int) -> None:
         """Record one attach decision (called once per splice)."""
@@ -449,25 +559,45 @@ class PrefixCache:
         Existing live entries are kept (first registrant wins — its page
         is the one sharers already hold); stale ones are replaced.
         Returns the number of entries written."""
+        _, wrote = self.register_prefix(tokens, block_pages)
+        return wrote
+
+    def register_prefix(self, tokens: np.ndarray,
+                        block_pages: Sequence[int],
+                        state: Optional[Tuple] = None
+                        ) -> Tuple[Tuple, int]:
+        """Incremental :meth:`register` for chunked prefill: resume the
+        chain from ``state`` (the opaque value a previous call returned
+        for a strict prefix of the same ``tokens``) so each chunk of a
+        long prompt registers its new full pages in O(chunk) instead of
+        re-hashing the whole prefix.  Returns ``(state, wrote)``."""
         if len(self._entries) > max(64, 2 * self.pool.num_pages):
             self._sweep()
-        key = b""
+        ps = self.page_size
+        tokens = np.asarray(tokens, np.int32)
+        key, i, root = state if state is not None else (b"", 0, None)
         wrote = 0
-        for i, chunk in self._chunks(tokens):
+        n = min(len(tokens) // ps, len(block_pages))
+        while i < n:
+            chunk = tokens[i * ps:(i + 1) * ps]
             key = self._chain(key, chunk)
-            if i >= len(block_pages):
-                break
+            if root is None:
+                root = key                   # prefix family = chunk-0 key
             e = self._entries.get(key)
             if e is not None and self._live(e) and \
                     np.array_equal(e.tokens, chunk):
-                continue
-            page = int(block_pages[i])
-            self._entries[key] = _PrefixEntry(
-                page, self.pool.generation(page), chunk.copy())
-            wrote += 1
+                self._retain(e.page, root, i)
+            else:
+                page = int(block_pages[i])
+                self._entries[key] = _PrefixEntry(
+                    page, self.pool.generation(page), chunk.copy())
+                self._retain(page, root, i)
+                wrote += 1
+            i += 1
         self.writes += wrote
-        return wrote
+        return (key, i, root), wrote
 
     def stats(self) -> PrefixStats:
         return PrefixStats(self._lookups, self._hits, self._pages_attached,
-                           self._tokens_shared, len(self._entries))
+                           self._tokens_shared, len(self._entries),
+                           len(self._retained), self._evictions)

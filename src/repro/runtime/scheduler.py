@@ -216,6 +216,27 @@ class Scheduler:
         return None
 
     # ------------------------------------------------------------------
+    def next_prefill_slot(self, prefilling: Dict[int, object]
+                          ) -> Optional[int]:
+        """Which in-progress chunked prefill advances this tick.
+
+        ``prefilling`` maps slot -> request for every slot whose prompt
+        is still being written chunk-by-chunk.  The pick mirrors the
+        admission policy's spirit at chunk granularity: the
+        highest-weight priority class present goes first (a realtime
+        prompt's time-to-first-token is not held behind a batch
+        prompt's), FCFS (admission order) within a class — so under a
+        chunk budget of one per tick, concurrent prefills drain in
+        class-then-arrival order rather than round-robin thrash."""
+        cands = [(s, r) for s, r in prefilling.items() if r is not None]
+        if not cands:
+            return None
+        slot, _ = min(cands, key=lambda sr: (-self.weight_of(sr[1]),
+                                             getattr(sr[1], "admit_seq", 0),
+                                             sr[0]))
+        return slot
+
+    # ------------------------------------------------------------------
     def choose_victim(self, running: Dict[int, object],
                       exclude: Optional[int] = None) -> Optional[int]:
         """Pick the slot to preempt when the pool is exhausted.

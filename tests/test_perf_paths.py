@@ -252,3 +252,37 @@ def test_bf16_attention_close_to_f32_oracle(rng):
     np.testing.assert_allclose(np.asarray(o, np.float32),
                                np.asarray(o_ref, np.float32),
                                rtol=5e-2, atol=5e-2)
+
+
+# ---------------------------------------------------------------------------
+# MoE expert gate+up fusion == per-projection oracle (expert_dense path)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", ["granite-moe-1b-a400m", "mixtral-8x22b"])
+def test_moe_expert_fusion_matches_unfused(arch):
+    """Fusing the stacked expert wg/wu along N (one expert_dense batched
+    matmul for both projections) must be exact for fp weights and
+    bit-identical to the group's unfused member views when quantized."""
+    cfg = registry.get(arch).reduced()
+    par = Parallel(remat=False, attn_chunk=32)
+    params = M.init_params(cfg, par, jax.random.PRNGKey(0))
+    batch = {"tokens": jnp.ones((2, 16), jnp.int32),
+             "targets": jnp.ones((2, 16), jnp.int32)}
+    base = M.forward_loss(cfg, par, params, batch)
+
+    fused = T.fuse_params_for_decode(params)
+    assert any("wgu" in bp.get("mlp", {}) and "router" in bp.get("mlp", {})
+               for sp in fused["stages"] for bp in sp), \
+        "MoE expert wg/wu must fuse into a QLinearGroup"
+    lf = M.forward_loss(cfg, par, fused, batch)
+    lu = M.forward_loss(cfg, par, T.unfuse_params_for_oracle(fused), batch)
+    assert float(base) == float(lf) == float(lu), \
+        "fp expert fusion is pure concatenation — must be exact"
+
+    qp = pipeline.quantize_params_data_free(
+        params, QuantConfig(ratio=0.25, multiple=16), min_dim=32,
+        fuse=True)
+    lq = M.forward_loss(cfg, par, qp, batch)
+    lqu = M.forward_loss(cfg, par, T.unfuse_params_for_oracle(qp), batch)
+    assert np.isfinite(float(lq))
+    assert float(lq) == float(lqu), \
+        "fused packed layout must match its unfused member views exactly"
